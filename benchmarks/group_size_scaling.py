@@ -1,0 +1,65 @@
+"""Beyond-paper study: how the LERC advantage scales with peer-group size.
+
+The paper evaluates only zip (k=2); §II-C names join/coalesce too.
+Going-in hypothesis: the gap WIDENS with k (a peer-oblivious policy keeps
+all k inputs with geometrically falling probability). Measured outcome:
+HALF-confirmed — LRU's effective-hit ratio does collapse to ~0 at every k
+(the mechanism), but at a FIXED byte budget LERC's own effective ratio
+also falls with k (a complete group costs k blocks, so fewer groups are
+packable), so the makespan advantage PEAKS at small k and narrows as k
+grows. Lesson: the all-or-nothing property gets harder for *everyone* to
+exploit as groups widen; LERC's edge is largest where complete groups are
+affordable. Recorded as a refuted-and-refined hypothesis in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from repro.sim import ClusterSim, HardwareModel, coalesce_job
+
+from .common import N_WORKERS, PAPER_HW, print_table, save_results
+
+POLICIES = ["lru", "lrc", "lerc"]
+TOTAL_BLOCKS = 960                    # constant bytes across k; several
+BLOCK_MB = 4                          # task waves per worker slot
+
+
+def run(policy: str, group_size: int, cache_frac: float = 0.5):
+    n_groups = TOTAL_BLOCKS // group_size
+    hw = HardwareModel(
+        cache_bytes=int(cache_frac * TOTAL_BLOCKS * BLOCK_MB * 2 ** 20)
+        // N_WORKERS, **PAPER_HW)
+    sim = ClusterSim(N_WORKERS, hw, policy=policy)
+    for t in range(3):                # 3 tenants
+        dag, _ = coalesce_job(f"j{t}", n_groups // 3, group_size,
+                              BLOCK_MB * 2 ** 20, n_workers=N_WORKERS)
+        sim.submit(dag)
+    sim.run(stages={0})
+    res = sim.run(stages={1})
+    return {
+        "policy": policy, "group_size": group_size,
+        "makespan_s": round(res.makespan, 2),
+        "hit_ratio": round(res.metrics.hit_ratio, 3),
+        "effective_hit_ratio": round(res.metrics.effective_hit_ratio, 3),
+    }
+
+
+def main() -> None:
+    rows = []
+    for k in (2, 4, 8):
+        for p in POLICIES:
+            rows.append(run(p, k))
+    print_table("Peer-group size scaling (coalesce-k)", rows,
+                ["policy", "group_size", "makespan_s", "hit_ratio",
+                 "effective_hit_ratio"])
+    save_results("group_size_scaling", rows)
+    print()
+    for k in (2, 4, 8):
+        sub = {r["policy"]: r for r in rows if r["group_size"] == k}
+        gap = 1 - sub["lerc"]["makespan_s"] / sub["lru"]["makespan_s"]
+        print(f"k={k}: LERC vs LRU makespan {gap:+.1%} "
+              f"(effective-hit {sub['lerc']['effective_hit_ratio']:.2f} "
+              f"vs {sub['lru']['effective_hit_ratio']:.2f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Real-pipeline benchmark: the paper's zip workload on the actual
+``repro.data`` executor with REAL disk spill I/O (not the simulator).
+Reports wall-clock I/O seconds, bytes re-read from disk, and the two hit
+ratios per policy — the mechanism end-to-end.
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+from repro.data import Executor, Pipeline
+
+from .common import print_table, save_results
+
+POLICIES = ["lru", "lrc", "lerc"]
+
+
+def run(policy: str, n_pairs: int = 24, block_kb: int = 256,
+        cache_blocks: int = 20):
+    rng = np.random.default_rng(0)
+    n = block_kb * 1024 // 4
+    A = [rng.integers(0, 1 << 30, n).astype(np.int32)
+         for _ in range(n_pairs)]
+    B = [rng.integers(0, 1 << 30, n).astype(np.int32)
+         for _ in range(n_pairs)]
+    pipe = Pipeline("bench")
+    ra = pipe.source(A, "A")
+    rb = pipe.source(B, "B")
+    rz = pipe.zip_([ra, rb], lambda a, b: a + b, "Z")
+    with tempfile.TemporaryDirectory() as spill:
+        ex = Executor(pipe, cache_bytes=cache_blocks * A[0].nbytes,
+                      policy=policy, spill_dir=spill)
+        ex.load_sources(ra)
+        ex.load_sources(rb)
+        ex.materialize(rz)
+        return {
+            "policy": policy,
+            "hit_ratio": round(ex.metrics.hit_ratio, 3),
+            "effective_hit_ratio": round(ex.metrics.effective_hit_ratio, 3),
+            "disk_reread_mb": round(ex.stats.disk_read_bytes / 2 ** 20, 1),
+            "io_seconds": round(ex.stats.io_seconds, 3),
+        }
+
+
+def main() -> None:
+    rows = [run(p) for p in POLICIES]
+    print_table("Real pipeline (disk spill) — policy comparison", rows,
+                ["policy", "hit_ratio", "effective_hit_ratio",
+                 "disk_reread_mb", "io_seconds"])
+    save_results("pipeline_bench", rows)
+    lerc = next(r for r in rows if r["policy"] == "lerc")
+    lru = next(r for r in rows if r["policy"] == "lru")
+    if lru["disk_reread_mb"] > 0:
+        saved = 1 - lerc["disk_reread_mb"] / lru["disk_reread_mb"]
+        print(f"\nLERC re-reads {saved:.1%} fewer bytes than LRU")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Extended policy frontier (beyond the paper's three): all 8 policies +
+the Belady clairvoyant bound on the paper's §IV workload, at the paper's
+cache sweep. Shows where LERC sits between practical policies and OPT.
+"""
+from __future__ import annotations
+
+from repro.sim import ClusterSim, HardwareModel, multi_tenant_zip, \
+    zip_access_trace
+
+from .common import N_WORKERS, PAPER_HW, print_table, save_results
+
+POLICIES = ["lru", "mru", "fifo", "lfu", "lrc", "sticky", "lerc", "belady"]
+
+
+def run(policy: str, cache_gb: float, n_jobs=6, n_blocks=60):
+    hw = HardwareModel(cache_bytes=int(cache_gb * 2 ** 30) // N_WORKERS,
+                       **PAPER_HW)
+    sim = ClusterSim(N_WORKERS, hw, policy=policy)
+    for dag, _ in multi_tenant_zip(n_jobs=n_jobs, n_blocks=n_blocks,
+                                   n_workers=N_WORKERS):
+        sim.submit(dag)
+    sim.run(stages={0})
+    res = sim.run(stages={1},
+                  belady_trace=zip_access_trace(n_jobs, n_blocks)
+                  if policy == "belady" else None)
+    return {
+        "policy": policy,
+        "cache_gb": cache_gb,
+        "makespan_s": round(res.makespan, 2),
+        "hit_ratio": round(res.metrics.hit_ratio, 3),
+        "effective_hit_ratio": round(res.metrics.effective_hit_ratio, 3),
+    }
+
+
+def main() -> None:
+    rows = []
+    for gb in (2.4, 3.6):
+        for p in POLICIES:
+            rows.append(run(p, gb))
+    print_table("Policy frontier (8 policies + Belady bound)", rows,
+                ["policy", "cache_gb", "makespan_s", "hit_ratio",
+                 "effective_hit_ratio"])
+    save_results("policy_frontier", rows)
+    for gb in (2.4, 3.6):
+        sub = {r["policy"]: r["makespan_s"] for r in rows
+               if r["cache_gb"] == gb}
+        gap = (sub["lerc"] - sub["belady"]) / max(sub["belady"], 1e-9)
+        rel = (f"{-gap:.1%} FASTER than" if gap < 0
+               else f"within {gap:.1%} of")
+        print(f"cache={gb}GB: LERC {rel} the hit-ratio-optimal Belady "
+              f"bound — the clairvoyant policy optimizes the wrong metric "
+              f"(the paper's thesis, sharpened)")
+
+
+if __name__ == "__main__":
+    main()

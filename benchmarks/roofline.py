@@ -1,0 +1,270 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Roofline extraction per (arch × shape × mesh) — §Roofline method.
+
+XLA counts a ``lax.scan`` body ONCE regardless of trip count (verified
+empirically; see DESIGN.md §8), so per-cell totals are recovered by a
+two-point fit over reduced-depth compiles:
+
+    unit  = cost(2 pattern-units) - cost(1 pattern-unit)
+    tail  = cost(1 unit + tail)   - cost(1 unit)        [if a tail exists]
+    total = cost(1 unit) + (n_rep - 1) * unit + tail
+
+applied identically to HLO FLOPs, bytes-accessed and parsed collective
+wire bytes. Train cells are fitted at microbatches=1 (the accumulation
+scan would otherwise hide k-1 of the k microbatches) and scaled by k
+where k is the production microbatch count; memory comes from the full
+production compile (the dry-run artifact).
+
+Terms (TPU v5e): compute = FLOPs / (chips·197 TFLOP/s bf16);
+memory = bytes / (chips·819 GB/s); collective = per-chip wire bytes /
+(50 GB/s ICI link). MODEL_FLOPS is the analytic useful-work count
+(matmul params × tokens × 2 [×3 for bwd] + exact causal attention-score
+FLOPs); the MODEL/HLO ratio flags remat and upper-triangle waste.
+"""
+import argparse
+import json
+import sys
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro import configs
+from repro.models.common import ModelConfig
+from repro.models.lm import unit_pattern
+from repro.models.recurrent import _LORA_DIM, rwkv_heads
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+CHIPS = {False: 256, True: 512}
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+
+def _per_layer_matmul_params(cfg: ModelConfig, kind: str) -> float:
+    d, H, KV, Dh, f = (cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.d_head,
+                       cfg.d_ff)
+    nc = 2 if cfg.act in ("swiglu", "geglu") else 1
+    attn = d * H * Dh + 2 * d * KV * Dh + H * Dh * d
+    if kind in ("G", "L"):
+        ff = cfg.dense_d_ff or f if (kind == "G" and cfg.n_experts) else f
+        return attn + nc * d * ff + ff * d
+    if kind == "M":
+        active = cfg.top_k + cfg.n_shared_experts
+        return attn + active * (nc * d * f + f * d) + d * cfg.n_experts
+    if kind == "R":
+        W = cfg.lru_width
+        rec = 2 * d * W + W * d + cfg.conv_width * W + 2 * W * (W // 16)
+        return rec + nc * d * f + f * d
+    if kind == "W":
+        Hh, N = rwkv_heads(cfg)
+        tm = 4 * d * Hh * N + d * _LORA_DIM + _LORA_DIM * Hh * N \
+            + Hh * N * d
+        cm = d * f + f * d + d * d
+        return tm + cm
+    raise ValueError(kind)
+
+
+def _attn_score_flops(cfg: ModelConfig, kind: str, seq: int,
+                      mode: str, kv_len: int) -> float:
+    """Exact useful attention-score FLOPs per sequence (qk^T + pv)."""
+    if kind in ("R", "W"):
+        # linear recurrences: state ops, counted per token
+        if kind == "R":
+            return 4.0 * cfg.lru_width * (seq if mode != "decode" else 1)
+        Hh, N = rwkv_heads(cfg)
+        return 4.0 * Hh * N * N * (seq if mode != "decode" else 1)
+    H, Dh = cfg.n_heads, cfg.d_head
+    if mode == "decode":
+        eff = min(cfg.window, kv_len) if (kind == "L" and cfg.window) \
+            else kv_len
+        return 4.0 * H * Dh * eff
+    if kind == "L" and cfg.window:
+        w = min(cfg.window, seq)
+        avg = w / 2 + (seq - w) * w / seq if seq > w else seq / 2
+        return 4.0 * H * Dh * seq * avg
+    return 4.0 * H * Dh * seq * (seq + 1) / 2
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    pat, n_rep, tail = unit_pattern(cfg)
+    kinds = list(pat) * n_rep + list(tail)
+    seq = shape.seq_len
+    B = shape.global_batch
+    mode = shape.kind
+    tokens = B * (1 if mode == "decode" else seq)
+    mm = sum(_per_layer_matmul_params(cfg, k) for k in kinds)
+    mm += cfg.d_model * cfg.vocab                      # unembed
+    if cfg.family == "encdec":
+        enc_mm = cfg.n_encoder_layers * _per_layer_matmul_params(cfg, "G")
+        mm += enc_mm * (cfg.frontend_len / max(seq, 1))  # enc runs on frames
+    total = 2.0 * mm * tokens
+    total += B * sum(_attn_score_flops(cfg, k, seq, mode, seq)
+                     for k in kinds)
+    if mode == "train":
+        total *= 3.0                                   # fwd + bwd
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Depth-delta extraction
+# ---------------------------------------------------------------------------
+
+
+def _reduced(cfg: ModelConfig, n_units: int, with_tail: bool):
+    pat, n_rep, tail = unit_pattern(cfg)
+    n_layers = n_units * len(pat) + (len(tail) if with_tail else 0)
+    kw = dict(n_layers=n_layers)
+    if cfg.family == "encdec":
+        kw["n_encoder_layers"] = n_units
+    return cfg.replace(**kw)
+
+
+def extract_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 microbatches: int = 8, production: Optional[Dict] = None,
+                 exact_causal: Optional[bool] = None,
+                 seq_shard: bool = True, cost_mb: int = 1,
+                 moments_dtype: str = "float32") -> Dict:
+    """``cost_mb=1`` (default) fits the per-step cost with the whole batch
+    in one pass — correct FLOPs/bytes, but FSDP weight-gather collectives
+    that repeat per microbatch are counted once. ``cost_mb=k`` unrolls the
+    k-microbatch accumulation loop for production-exact collectives
+    (§Perf hillclimb C uses this)."""
+    from repro.launch.dryrun import run_cell
+    cfg = configs.get(arch)
+    if exact_causal is not None:
+        cfg = cfg.replace(exact_causal=exact_causal)
+    shape = configs.SHAPES[shape_name]
+    pat, n_rep, tail = unit_pattern(cfg)
+    is_train = shape.kind == "train"
+    mb_cost = cost_mb if is_train else 1
+    mb_prod = microbatches if is_train else 1
+
+    def costs(n_units, with_tail=False):
+        # fully unroll the layer scan (unroll = trip count -> no while
+        # loop) AND the attention inner KV scans: XLA's cost analysis
+        # counts loop bodies once, so only unrolled code is countable
+        import repro.models.attention as A
+        A.UNROLL_INNER = True
+        try:
+            n_layers_units = n_units  # scan length == unroll
+            r = run_cell(arch, shape_name, multi_pod=multi_pod,
+                         cfg_override=_reduced(cfg, n_units, with_tail),
+                         microbatches=mb_cost, seq_shard=seq_shard,
+                         unroll=max(n_layers_units, 1),
+                         mb_unroll=mb_cost > 1,
+                         moments_dtype=moments_dtype)
+        finally:
+            A.UNROLL_INNER = False
+        return np.array([r["cost"]["flops"],
+                         r["cost"]["bytes_accessed"],
+                         r["collectives"]["total_bytes"]])
+
+    c1 = costs(1)
+    c2 = costs(2)
+    unit = c2 - c1
+    tail_cost = (costs(1, with_tail=True) - c1) if tail else 0.0
+    # the mb=1 fit already pushes the full global batch through one pass,
+    # so no microbatch scaling is needed — mb only affects peak memory
+    total = c1 + (n_rep - 1) * unit + tail_cost
+    # memory: production compile (the dry-run artifact)
+    prod = production or run_cell(arch, shape_name, multi_pod=multi_pod,
+                                  microbatches=mb_prod,
+                                  seq_shard=seq_shard)
+
+    chips = CHIPS[multi_pod]
+    # cost_analysis reports PER-DEVICE quantities for SPMD modules
+    # (verified: a 4-way-sharded matmul reports 2MNK/4) — so the terms
+    # divide by per-chip peaks only; chips enter via the global ratio.
+    flops, bytes_acc, coll = (float(x) for x in total)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "hlo_flops_per_chip": flops, "hlo_bytes_per_chip": bytes_acc,
+        "collective_bytes_per_chip": coll,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": mf / (flops * chips) if flops else 0.0,
+        "step_time_bound_s": max(t_compute, t_memory, t_coll),
+        "mfu_bound": (mf / chips / PEAK_FLOPS)
+        / max(t_compute, t_memory, t_coll, 1e-12),
+        "peak_bytes_per_dev": prod["memory"]["peak_bytes"],
+        "hbm_frac": prod["hbm_frac"],
+    }
+
+
+def print_cached(path: str) -> bool:
+    if not os.path.exists(path):
+        return False
+    with open(path) as f:
+        rows = json.load(f)
+    print(f"(cached {path}; re-extract with --cells all)")
+    for r in rows:
+        if "error" in r:
+            print(f"{r['arch']:28s} {r['shape']:12s} ERROR {r['error']}")
+            continue
+        print(f"{r['arch']:28s} {r['shape']:12s} dom={r['dominant']:10s} "
+              f"tc={r['t_compute_s']*1e3:8.2f}ms "
+              f"tm={r['t_memory_s']*1e3:8.2f}ms "
+              f"tx={r['t_collective_s']*1e3:8.2f}ms "
+              f"useful={r['useful_ratio']:.2f} "
+              f"hbm={100*r['hbm_frac']:5.1f}%")
+    return True
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default=None,
+                    help="'all' or comma list arch:shape; default: print "
+                         "the cached table (or a 3-cell sample)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=os.path.join(RESULTS,
+                                                   "roofline.json"))
+    args = ap.parse_args(argv)
+    if args.cells is None:
+        if print_cached(args.json):
+            return 0
+        cells = [("qwen2_7b", "train_4k"), ("rwkv6_3b", "prefill_32k"),
+                 ("gemma2_27b", "decode_32k")]
+        args.json = os.path.join(RESULTS, "roofline_sample.json")
+    elif args.cells == "all":
+        cells = configs.cells()
+    else:
+        cells = [tuple(c.split(":")) for c in args.cells.split(",")]
+    rows = []
+    for arch, shape in cells:
+        try:
+            r = extract_cell(arch, shape, multi_pod=args.multi_pod)
+            rows.append(r)
+            print(f"{arch:28s} {shape:12s} dom={r['dominant']:10s} "
+                  f"tc={r['t_compute_s']*1e3:8.2f}ms "
+                  f"tm={r['t_memory_s']*1e3:8.2f}ms "
+                  f"tx={r['t_collective_s']*1e3:8.2f}ms "
+                  f"useful={r['useful_ratio']:.2f}", flush=True)
+        except Exception as e:
+            print(f"[FAIL] {arch} {shape}: {type(e).__name__}: {e}",
+                  flush=True)
+            rows.append({"arch": arch, "shape": shape, "error": str(e)})
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

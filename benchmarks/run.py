@@ -1,0 +1,48 @@
+"""Benchmark harness — one entry per paper table/figure, plus the
+framework-level benches (prefix cache, roofline extraction).
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run              # everything
+    PYTHONPATH=src python -m benchmarks.run fig5         # one benchmark
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _bench(name, fn):
+    t0 = time.time()
+    print(f"\n######## {name} ########")
+    fn()
+    print(f"[{name}] done in {time.time() - t0:.1f}s")
+
+
+def main(argv=None) -> None:
+    argv = argv if argv is not None else sys.argv[1:]
+    from . import fig3_all_or_nothing, fig5_makespan, fig6_fig7_hit_ratios
+    registry = {
+        "fig3": fig3_all_or_nothing.main,
+        "fig5": fig5_makespan.main,
+        "fig6_fig7": fig6_fig7_hit_ratios.main,
+    }
+    for mod, key in (("policy_frontier", "policy_frontier"),
+                     ("group_size_scaling", "group_size"),
+                     ("prefix_cache_bench", "prefix_cache"),
+                     ("pipeline_bench", "pipeline"),
+                     ("roofline", "roofline")):
+        try:
+            m = __import__(f"benchmarks.{mod}", fromlist=["main"])
+            registry[key] = m.main
+        except ImportError:
+            pass
+
+    wanted = argv or list(registry)
+    for name in wanted:
+        if name not in registry:
+            raise SystemExit(f"unknown benchmark {name!r}; have {sorted(registry)}")
+        _bench(name, registry[name])
+
+
+if __name__ == "__main__":
+    main()

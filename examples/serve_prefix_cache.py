@@ -1,0 +1,63 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine; compare prefix-cache eviction policies under a constrained
+KV budget (the paper's LERC vs LRU/LRC, on the serving side).
+
+    PYTHONPATH=src python examples/serve_prefix_cache.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import init_params, model_spec
+from repro.serve import PrefixStore, ServeEngine
+
+
+def workload(vocab, rng, n_requests=24, n_families=6, prefix_len=32):
+    fam_p = 1.0 / np.arange(1, n_families + 1)          # Zipf popularity
+    fam_p /= fam_p.sum()
+    prefixes = [list(rng.integers(0, vocab, prefix_len))
+                for _ in range(n_families)]
+    reqs = []
+    for _ in range(n_requests):
+        fam = rng.choice(n_families, p=fam_p)
+        reqs.append(prefixes[fam] + list(rng.integers(0, vocab, 8)))
+    return reqs
+
+
+def main() -> int:
+    cfg = configs.get("qwen2_7b", smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=cfg.dtype)
+
+    # size the budget to 8 blocks so eviction pressure is real
+    probe = ServeEngine(cfg, params, max_slots=1, max_seq=96)
+    budget = probe._block_nbytes() * 8
+
+    rng = np.random.default_rng(0)
+    reqs = workload(cfg.vocab, rng)
+
+    print(f"{len(reqs)} requests, 5 Zipf families, KV budget = "
+          f"{budget/1024:.0f} KiB\n")
+    for policy in ("lru", "lrc", "lerc"):
+        store = PrefixStore(capacity_bytes=budget, policy=policy,
+                            block_tokens=8)
+        eng = ServeEngine(cfg, params, max_slots=3, max_seq=96, store=store)
+        t0 = time.time()
+        for r in reqs:
+            eng.submit(list(r), max_new=4)
+        eng.run()
+        m = eng.metrics()
+        print(f"{policy:5s}  engine-steps {m['engine_steps']:4d}   "
+              f"prefill saved {m['prefill_saved_frac']:6.1%}   "
+              f"chain-hit {m['hit_ratio']:5.1%}   "
+              f"effective {m['effective_hit_ratio']:5.1%}   "
+              f"({time.time()-t0:.1f}s)")
+    print("\nfewer engine steps == less prefill compute; LERC keeps the "
+          "popular family chains INTACT instead of fragmenting them")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,82 @@
+"""repro.configs — assigned architectures and benchmark shapes.
+
+Each ``<arch>.py`` exposes ``full()`` (the exact published config) and
+``smoke()`` (same family, reduced: few layers, narrow width, tiny vocab) —
+smoke configs run a real train/decode step on CPU; full configs are only
+ever lowered AOT (dry-run).
+
+``SHAPES`` are the assigned input-shape set; ``cells()`` enumerates the
+(arch x shape) grid with the documented skips (DESIGN.md §5):
+``long_500k`` needs sub-quadratic decode state, so it runs only for the
+hybrid/ssm archs (+ gemma2, whose decode step is O(L) with half the layers
+window-bounded).
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..models.common import ModelConfig
+
+ARCH_IDS = [
+    "recurrentgemma_9b",
+    "qwen1_5_110b",
+    "codeqwen1_5_7b",
+    "gemma2_27b",
+    "qwen2_7b",
+    "paligemma_3b",
+    "moonshot_v1_16b_a3b",
+    "llama4_maverick_400b_a17b",
+    "whisper_base",
+    "rwkv6_3b",
+]
+
+# aliases accepted on the CLI (--arch recurrentgemma-9b etc.)
+def canonical(arch: str) -> str:
+    a = arch.replace("-", "_").replace(".", "_")
+    if a not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch!r}; have {ARCH_IDS}")
+    return a
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k":    ShapeSpec("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeSpec("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeSpec("long_500k",   524_288, 1,   "decode"),
+}
+
+# archs whose decode state is sub-quadratic enough for the 500k cell
+_LONG_OK = {"recurrentgemma_9b", "rwkv6_3b", "gemma2_27b"}
+
+
+def get(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f".{canonical(arch)}", __name__)
+    return mod.smoke() if smoke else mod.full()
+
+
+def cells() -> List[Tuple[str, str]]:
+    """Every (arch, shape) pair exercised by the dry-run."""
+    out: List[Tuple[str, str]] = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            if s == "long_500k" and a not in _LONG_OK:
+                continue
+            out.append((a, s))
+    return out
+
+
+def skipped_cells() -> List[Tuple[str, str, str]]:
+    return [(a, "long_500k",
+             "pure full attention at 524288: quadratic prefill; skipped per "
+             "assignment (DESIGN.md §5)")
+            for a in ARCH_IDS if a not in _LONG_OK]

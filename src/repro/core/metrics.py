@@ -1,0 +1,77 @@
+"""Cache performance metrics.
+
+The paper's point (§III-A, Figs. 6–7): the *effective* cache hit ratio —
+hits whose whole peer group is resident — predicts job runtime; the plain
+hit ratio does not.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass
+class CacheMetrics:
+    accesses: int = 0
+    hits: int = 0
+    effective_hits: int = 0
+    evictions: int = 0
+    disk_bytes_read: int = 0
+    mem_bytes_read: int = 0
+
+    def record_access(self, hit: bool, effective: bool) -> None:
+        self.accesses += 1
+        if hit:
+            self.hits += 1
+        if effective:
+            if not hit:
+                raise ValueError("an effective hit must be a hit")
+            self.effective_hits += 1
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hits / self.accesses if self.accesses else 0.0
+
+    @property
+    def effective_hit_ratio(self) -> float:
+        return self.effective_hits / self.accesses if self.accesses else 0.0
+
+    def merge(self, other: "CacheMetrics") -> "CacheMetrics":
+        return CacheMetrics(
+            accesses=self.accesses + other.accesses,
+            hits=self.hits + other.hits,
+            effective_hits=self.effective_hits + other.effective_hits,
+            evictions=self.evictions + other.evictions,
+            disk_bytes_read=self.disk_bytes_read + other.disk_bytes_read,
+            mem_bytes_read=self.mem_bytes_read + other.mem_bytes_read,
+        )
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "accesses": self.accesses,
+            "hits": self.hits,
+            "effective_hits": self.effective_hits,
+            "evictions": self.evictions,
+            "hit_ratio": self.hit_ratio,
+            "effective_hit_ratio": self.effective_hit_ratio,
+            "disk_bytes_read": self.disk_bytes_read,
+            "mem_bytes_read": self.mem_bytes_read,
+        }
+
+
+@dataclass
+class MessageStats:
+    """Coordination-protocol traffic (paper §III-C)."""
+
+    peer_profile_broadcasts: int = 0      # job submit: peer info -> workers
+    eviction_reports: int = 0             # worker -> master
+    eviction_broadcasts: int = 0          # master -> all workers
+    point_to_point: int = 0               # individual messages on the wire
+
+    def as_dict(self) -> Dict[str, int]:
+        return {
+            "peer_profile_broadcasts": self.peer_profile_broadcasts,
+            "eviction_reports": self.eviction_reports,
+            "eviction_broadcasts": self.eviction_broadcasts,
+            "point_to_point": self.point_to_point,
+        }

@@ -1,0 +1,7 @@
+"""repro.data — lineage-DAG pipeline with LERC block cache + per-host
+training loader (shard/prefetch/resume/work-stealing)."""
+from .loader import LoaderConfig, SyntheticTokenSource, TrainLoader
+from .pipeline import DataRef, ExecStats, Executor, Pipeline
+
+__all__ = ["LoaderConfig", "SyntheticTokenSource", "TrainLoader",
+           "DataRef", "ExecStats", "Executor", "Pipeline"]

@@ -1,0 +1,8 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot spots: flash
+attention (GQA/window/softcap), RG-LRU scan, RWKV6 chunked WKV. Each has a
+pure-jnp oracle in ref.py; tests sweep shapes/dtypes via interpret mode."""
+from .ops import (decode_attention, flash_attention, rglru_scan,
+                  rwkv6_wkv)
+
+__all__ = ["decode_attention", "flash_attention", "rglru_scan",
+           "rwkv6_wkv"]

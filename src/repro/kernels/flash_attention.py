@@ -1,0 +1,150 @@
+"""Flash attention Pallas TPU kernel: GQA, causal/window, logit softcap.
+
+TPU-native adaptation (not a CUDA port):
+
+* Grid ``(B, H, nq, nk)`` with the KV dimension innermost ("arbitrary"
+  semantics): the online-softmax carry (m, l, acc) lives in VMEM scratch
+  and survives across the KV steps of one (b, h, iq) tile — the canonical
+  TPU flash schedule (one MXU matmul pair per grid step).
+* BlockSpecs tile Q/K/V straight from HBM into VMEM: ``(bq, d)`` query
+  tiles and ``(bk, d)`` KV tiles, d padded to the 128-lane register width
+  by the caller (ops.py). bq = bk = 128 aligns both MXU operands.
+* Causal/window masking is positional (iota within the tile); fully-masked
+  tiles are *skipped on the wire* by the index-map trick: their loads are
+  re-pointed at tile 0 and the accumulation is gated by ``pl.when`` — the
+  TPU grid is sequential per core, so skipping the FLOPs is what matters.
+* GQA: the kernel receives K/V already indexed per query head
+  (``h // group`` in the index_map) — no repeated KV materialization.
+
+Validated on CPU in interpret mode against ``ref.py`` (tests/test_kernels).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, nk: int, causal: bool,
+                  window: Optional[int], softcap: Optional[float],
+                  kv_len: int, scale: float):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q0 = iq * bq
+    k0 = ik * bk
+    # tile-level skip decision (traced; grid is sequential per core)
+    relevant = jnp.bool_(True)
+    if causal:
+        relevant &= k0 <= q0 + bq - 1            # below-diagonal tiles only
+    if window is not None:
+        relevant &= k0 + bk - 1 > q0 - window    # inside the band
+
+    @pl.when(relevant)
+    def attend():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - safe_m)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0,
+                          jnp.exp(m_prev - safe_m))
+        m_scr[...] = m_new
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = alpha * acc_scr[...] + pv
+
+    @pl.when(ik == nk - 1)
+    def finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Skv, KV, D), H % KV == 0.
+    Returns (B, Sq, H, D). Self-attention positions (Sq tail-aligned to
+    Skv is not supported here; Sq == Skv)."""
+    B, Sq, H, D = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Skv, 8))
+    Sq_p = -(-Sq // bq) * bq
+    Skv_p = -(-Skv // bk) * bk
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    if Skv_p != Skv:
+        pad = ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0))
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    nq, nk = Sq_p // bq, Skv_p // bk
+
+    # (B, S, H, D) -> (B, H, S, D): heads become a parallel grid dim and
+    # the (S, D) tile is MXU-layout friendly
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal, window=window,
+        softcap=softcap, kv_len=Skv, scale=1.0 / float(np.sqrt(D)))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # m: running row max
+            pltpu.VMEM((bq, 1), jnp.float32),   # l: running row sum
+            pltpu.VMEM((bq, D), jnp.float32),   # acc: unnormalized output
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :Sq] if Sq_p != Sq else out

@@ -1,0 +1,59 @@
+"""Jitted public entry points for the Pallas kernels.
+
+On CPU (this container) the kernels run in interpret mode — the kernel
+body executes as traced jnp ops, validating the exact tiling/masking logic
+the TPU grid would run. On TPU backends ``interpret=False`` compiles the
+real Mosaic kernels. The switch is automatic via ``jax.default_backend()``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention as _decode
+from .flash_attention import flash_attention as _flash
+from .rglru_scan import rglru_scan_kernel as _rglru
+from .rwkv6_scan import rwkv6_chunked_kernel as _rwkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128):
+    """Flash attention with GQA / sliding window / logit softcap.
+    q: (B,S,H,D); k,v: (B,S,KV,D) -> (B,S,H,D)."""
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k,
+                  interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_w"))
+def rglru_scan(a, b, *, block_t: int = 256, block_w: int = 512):
+    """RG-LRU recurrence h_t = a_t h_{t-1} + b_t. a,b: (B,T,W).
+    Returns (y (B,T,W) fp32, h_last (B,W))."""
+    return _rglru(a, b, block_t=block_t, block_w=block_w,
+                  interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def rwkv6_wkv(r, k, v, logw, u, *, chunk: int = 32):
+    """RWKV6 WKV mixing. r,k,v,logw: (B,T,H,N); u: (H,N) -> (B,T,H,N)."""
+    return _rwkv(r, k, v, logw, u, chunk=chunk, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "block_k"))
+def decode_attention(q, k, v, valid_len, *, window: Optional[int] = None,
+                     softcap: Optional[float] = None, block_k: int = 256):
+    """Flash-decoding: one query per row against a (B,S,KV,D) cache with
+    per-row valid lengths. q: (B,H,D) -> (B,H,D)."""
+    return _decode(q, k, v, valid_len, window=window, softcap=softcap,
+                   block_k=block_k, interpret=_interpret())

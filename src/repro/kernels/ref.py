@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every kernel — deliberately naive (token-by-token
+recurrences, full attention matrices) and independent of both the Pallas
+kernels and the models' chunked implementations, so a bug shared by an
+optimized pair cannot cancel out."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal=True, window: Optional[int] = None,
+                  softcap: Optional[float] = None) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,Skv,KV,D). Full-matrix fp32 softmax."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    ke = jnp.repeat(k, H // KV, axis=2)
+    ve = jnp.repeat(v, H // KV, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        ke.astype(jnp.float32)) / np.sqrt(D)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      ve.astype(jnp.float32)).astype(q.dtype)
+
+
+def rglru_ref(a, b):
+    """Sequential oracle for h_t = a_t h_{t-1} + b_t. a,b: (B,T,W) fp32.
+    Returns (y (B,T,W), h_last (B,W))."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0,
+                              (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2), h_last
+
+
+def rwkv6_ref(r, k, v, logw, u):
+    """Token-by-token WKV oracle.
+    out_t = r_t (S_{t-1} + u ⊙ k_t v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    r,k,v,logw: (B,T,H,N); u: (H,N). Returns (B,T,H,N) fp32."""
+    rf, kf, vf, lw = (t.astype(jnp.float32) for t in (r, k, v, logw))
+    uf = u.astype(jnp.float32)
+    B, T, H, N = rf.shape
+
+    def step(S, xs):
+        rt, kt, vt, lwt = xs                       # (B,H,N)
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        out = jnp.einsum("bhn,bhnm->bhm", rt,
+                         S + uf[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, out
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (rf, kf, vf, lw))
+    _, outs = jax.lax.scan(step, S0, xs)
+    return outs.transpose(1, 0, 2, 3)

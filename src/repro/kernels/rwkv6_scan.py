@@ -1,0 +1,103 @@
+"""RWKV6 (Finch) chunked WKV Pallas TPU kernel.
+
+The WKV recurrence with data-dependent per-channel decay w_t:
+
+    out_t = r_t · (S_{t-1} + u ⊙ k_t v_tᵀ) ;  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+TPU adaptation: the chunked linear-attention form (as in the Finch paper's
+CUDA kernel, re-blocked for the MXU). Per (b, h) head the kernel walks T in
+chunks of C tokens, carrying the (N, N) state in VMEM scratch; each chunk
+does three (C,N)x(N,C|N,N) MXU matmuls (intra scores, intra output, inter
+output) plus the rank-C state update — all operands VMEM-resident. Exponent
+shifts (per-chunk ``a0``) keep every exp() bounded, matching ref.py.
+
+Grid ``(B, H, nc)`` with the chunk dim innermost (sequential); C=32 and
+N≤256 keep the working set ≈ C·N·5·4B + N²·4B ≈ 0.4 MB ≪ VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *,
+                 C: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, :, 0].astype(jnp.float32)        # (C, N)
+    k = k_ref[0, :, 0].astype(jnp.float32)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    lw = lw_ref[0, :, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)              # (1, N) -> broadcast
+    S = s_scr[...]                                # (N, N)
+
+    lc = jnp.cumsum(lw, axis=0)                   # inclusive log decay
+    lce = lc - lw                                 # exclusive
+    a0 = lc[0:1]                                  # per-chunk shift (1, N)
+    q_in = r * jnp.exp(lce - a0)                  # bounded exponents
+    k_in = k * jnp.exp(a0 - lc)
+
+    # intra-chunk: strict lower triangle + current-token bonus u
+    scores = jax.lax.dot_general(q_in, k_in, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ti = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    scores = jnp.where(tj < ti, scores, 0.0)
+    out = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    bonus = jnp.sum(r * (u * k), axis=1, keepdims=True)      # (C, 1)
+    out = out + bonus * v
+    # inter-chunk: contributions of the carried state
+    out = out + jax.lax.dot_general(q_in * jnp.exp(a0), S,
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    o_ref[0, :, 0] = out.astype(o_ref.dtype)
+
+    # state update: S <- diag(exp(lc_last)) S + sum_j k_j exp(lc_last-lc_j) v_j^T
+    last = lc[-1:]                                # (1, N)
+    k_out = k * jnp.exp(last - lc)                # (C, N)
+    s_scr[...] = (jnp.exp(last).T * S
+                  + jax.lax.dot_general(k_out, v, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+
+def rwkv6_chunked_kernel(r, k, v, logw, u, *, chunk: int = 32,
+                         interpret: bool = False):
+    """r,k,v,logw: (B, T, H, N); u: (H, N). Returns wkv (B, T, H, N) fp32.
+    T must be a multiple of ``chunk`` (callers pad; logw pad value 0 and
+    k pad 0 keep the state invariant)."""
+    B, T, H, N = r.shape
+    C = min(chunk, T)
+    T_p = -(-T // C) * C
+    if T_p != T:
+        pad = ((0, 0), (0, T_p - T), (0, 0), (0, 0))
+        r = jnp.pad(r, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        logw = jnp.pad(logw, pad)
+    nc = T_p // C
+
+    out = pl.pallas_call(
+        functools.partial(_rwkv_kernel, C=C),
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, N), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, C, 1, N), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, C, 1, N), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, C, 1, N), lambda b, h, ic: (b, ic, h, 0)),
+            pl.BlockSpec((1, N), lambda b, h, ic: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, N), lambda b, h, ic: (b, ic, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T_p, H, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)
+    return out[:, :T] if T_p != T else out

@@ -1,0 +1,7 @@
+"""repro.launch — mesh construction, AOT dry-run, trainer and server
+entry points. NOTE: ``dryrun`` must be imported first in its process (it
+sets XLA_FLAGS before jax initializes devices)."""
+from .mesh import make_debug_mesh_context, make_mesh_context, make_production_mesh
+
+__all__ = ["make_debug_mesh_context", "make_mesh_context",
+           "make_production_mesh"]

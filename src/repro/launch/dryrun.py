@@ -1,0 +1,143 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape) cell on the
+production meshes — 256-chip single-pod (data=16, model=16) and 512-chip
+multi-pod (pod=2, data=16, model=16) — and dump memory/cost/collective
+analysis. No arrays are ever allocated (ShapeDtypeStruct only); the 512
+forced host devices exist purely so ``jax.make_mesh`` can build the mesh.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all            # every cell, both meshes
+  python -m repro.launch.dryrun --all --json out.json
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from .. import configs
+from ..train import TrainConfig
+from .hlo_analysis import collective_stats, cost_summary, memory_summary
+from .mesh import make_mesh_context
+from .specs import build_cell
+
+V5E_HBM_BYTES = 16 * 2 ** 30          # per-chip HBM, TPU v5e
+
+# per-arch production training recipe (the §Perf hillclimb outcomes):
+# llama4-400B needs bf16 optimizer moments (fp32 m+v alone are 12.5 GB/chip
+# at 256 chips); everything else keeps fp32 moments.
+PROD_OVERRIDES = {
+    "llama4_maverick_400b_a17b": {"moments_dtype": "bfloat16"},
+}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             unroll: int = 1, cfg_override=None, seq_shard: bool = True,
+             microbatches: int = 1, with_collectives: bool = True,
+             exact_causal: Optional[bool] = None,
+             moments_dtype: str = "float32",
+             mb_unroll: bool = False) -> Dict:
+    t0 = time.time()
+    from ..train import OptConfig
+    mesh_ctx = make_mesh_context(multi_pod=multi_pod, seq_shard=seq_shard)
+    cfg = cfg_override if cfg_override is not None else configs.get(arch)
+    if exact_causal is not None:
+        cfg = cfg.replace(exact_causal=exact_causal)
+    tc = TrainConfig(opt=OptConfig(moments_dtype=moments_dtype),
+                     unroll=unroll, microbatches=microbatches,
+                     mb_unroll=mb_unroll)
+    fn, args, out_sh = build_cell(arch, shape_name, mesh_ctx,
+                                  train_cfg=tc, cfg_override=cfg,
+                                  unroll=unroll)
+    shape_kind = configs.SHAPES[shape_name].kind
+    # production aliasing: the train state / decode cache is donated —
+    # without it both the old and new state are live across the step
+    donate = (0,) if shape_kind == "train" else \
+             (1,) if shape_kind == "decode" else ()
+    with mesh_ctx.mesh:
+        lowered = jax.jit(fn, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+        mem = memory_summary(compiled)
+        cost = cost_summary(compiled)
+        coll = (collective_stats(compiled.as_text()).as_dict()
+                if with_collectives else {})
+    n_dev = mesh_ctx.mesh.size
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": f"{'2x16x16' if multi_pod else '16x16'}",
+        "devices": n_dev,
+        "ok": True,
+        "memory": mem,
+        "hbm_frac": mem["peak_bytes"] / V5E_HBM_BYTES,
+        "cost": cost,
+        "collectives": coll,
+        "compile_s": round(time.time() - t0, 1),
+    }
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", help="architecture id (see repro.configs)")
+    ap.add_argument("--shape", choices=list(configs.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every cell on both meshes")
+    ap.add_argument("--single-mesh", action="store_true",
+                    help="with --all: only the mesh selected by --multi-pod")
+    ap.add_argument("--unroll", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="grad-accumulation steps for train cells "
+                         "(production default 8; memory/compute trade)")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--json", help="write results to this file")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        cells = [(a, s, mp) for (a, s) in configs.cells()
+                 for mp in ((args.multi_pod,) if args.single_mesh
+                            else (False, True))]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(configs.canonical(args.arch), args.shape, args.multi_pod)]
+
+    results, failures = [], 0
+    for arch, shape, mp in cells:
+        label = f"{arch:28s} {shape:12s} {'2x16x16' if mp else '16x16'}"
+        over = PROD_OVERRIDES.get(arch, {})
+        try:
+            r = run_cell(arch, shape, multi_pod=mp, unroll=args.unroll,
+                         microbatches=args.microbatches,
+                         seq_shard=not args.no_seq_shard, **over)
+            print(f"[ok]   {label}  peak/dev={r['memory']['peak_bytes']/2**30:7.2f} GiB"
+                  f" ({100*r['hbm_frac']:5.1f}% HBM)"
+                  f"  flops={r['cost']['flops']:.3e}"
+                  f"  coll={r['collectives'].get('total_bytes', 0)/2**20:9.1f} MiB"
+                  f"  {r['compile_s']:6.1f}s", flush=True)
+        except Exception as e:
+            failures += 1
+            r = {"arch": arch, "shape": shape,
+                 "mesh": "2x16x16" if mp else "16x16", "ok": False,
+                 "error": f"{type(e).__name__}: {e}"}
+            print(f"[FAIL] {label}  {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(limit=3)
+        results.append(r)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"wrote {args.json}")
+    print(f"\n{len(results) - failures}/{len(results)} cells compiled")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Mesh construction for the production fleet.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — critical because the dry-run
+launches with 512 forced host devices while tests/benches must see 1.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from ..sharding import MeshContext
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods,
+    512 chips as (pod=2, data=16, model=16) — the ``pod`` axis carries
+    cross-pod data parallelism (slow links: DCN/ICI-oversubscribed)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_context(*, multi_pod: bool = False,
+                      seq_shard: bool = True,
+                      fsdp_params: bool = True) -> MeshContext:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    return MeshContext(mesh=mesh, data_axes=data_axes, model_axis="model",
+                       seq_shard=seq_shard, fsdp_params=fsdp_params)
+
+
+def make_debug_mesh_context(shape: Tuple[int, ...] = (2, 2),
+                            axes: Tuple[str, ...] = ("data", "model"),
+                            **kw) -> MeshContext:
+    """Tiny mesh over however many (forced) host devices exist — used by
+    sharding unit tests with XLA_FLAGS=--xla_force_host_platform_device_count=4."""
+    mesh = jax.make_mesh(shape, axes)
+    data_axes = tuple(a for a in axes if a != "model")
+    return MeshContext(mesh=mesh, data_axes=data_axes, model_axis="model",
+                       **kw)

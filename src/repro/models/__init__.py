@@ -1,0 +1,16 @@
+"""repro.models — the 10 assigned architectures as pure-JAX modules.
+
+``api`` is the uniform entry point (spec/forward/loss/decode); ``common``
+holds the ParamSpec system shared with sharding + checkpointing.
+"""
+from .api import (batch_shapes, decode_cache_shapes, decode_step, forward,
+                  init_decode_cache, loss_fn, make_dummy_batch, model_spec)
+from .common import (ModelConfig, ParamSpec, abstract_params, init_params,
+                     param_count, tree_paths)
+
+__all__ = [
+    "ModelConfig", "ParamSpec", "abstract_params", "init_params",
+    "param_count", "tree_paths", "batch_shapes", "decode_cache_shapes",
+    "decode_step", "forward", "init_decode_cache", "loss_fn",
+    "make_dummy_batch", "model_spec",
+]

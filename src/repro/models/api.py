@@ -1,0 +1,137 @@
+"""Uniform model API over every assigned architecture.
+
+One entry point per lifecycle stage, dispatching on ``cfg.family``:
+
+* ``model_spec(cfg)``                 — ParamSpec tree
+* ``forward(cfg, params, batch)``     — logits for training / prefill
+* ``loss_fn(cfg, params, batch)``     — scalar LM loss (next-token CE)
+* ``decode_cache_shapes`` / ``init_decode_cache`` / ``decode_step``
+* ``batch_shapes(cfg, batch, seq)``   — abstract input shapes (dry-run)
+
+Batch dict keys: ``tokens``/``targets`` always; ``patches`` for vlm
+(precomputed patch embeddings, frontend stub); ``frames`` for audio
+(precomputed frame embeddings, frontend stub).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import encdec as ED
+from . import lm as LM
+from .common import ModelConfig
+
+
+def model_spec(cfg: ModelConfig) -> Dict:
+    if cfg.family == "encdec":
+        return ED.encdec_spec(cfg)
+    return LM.lm_spec(cfg)
+
+
+def forward(cfg: ModelConfig, params, batch: Dict, *, mesh_ctx=None,
+            unroll: int = 1, last_logit_only: bool = False):
+    if cfg.family == "encdec":
+        return ED.encdec_forward(cfg, params, batch["tokens"],
+                                 batch["frames"], mesh_ctx=mesh_ctx,
+                                 unroll=unroll,
+                                 last_logit_only=last_logit_only)
+    return LM.lm_forward(cfg, params, batch["tokens"], mesh_ctx=mesh_ctx,
+                         patches=batch.get("patches"), unroll=unroll,
+                         last_logit_only=last_logit_only)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict, *, mesh_ctx=None,
+            unroll: int = 1):
+    logits = forward(cfg, params, batch, mesh_ctx=mesh_ctx, unroll=unroll)
+    targets = batch["targets"]
+    if cfg.frontend == "patch_embed" and logits.shape[1] != targets.shape[1]:
+        # drop the image-prefix positions: only text positions carry loss
+        logits = logits[:, -targets.shape[1]:]
+    return LM.lm_loss(cfg, logits, targets, batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int,
+                        enc_len: int = 0) -> Dict:
+    if cfg.family == "encdec":
+        return ED.encdec_cache_shapes(cfg, batch, max_seq,
+                                      enc_len or cfg.frontend_len)
+    return LM.cache_shapes(cfg, batch, max_seq)
+
+
+def cache_leaf_dtype(cfg: ModelConfig, name: str):
+    """Recurrent state ('S', 'h') is kept fp32 for long-horizon fidelity;
+    KV and shift buffers store in model dtype."""
+    return jnp.float32 if name in ("S", "h") else cfg.dtype
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                      enc_len: int = 0):
+    shapes = decode_cache_shapes(cfg, batch, max_seq, enc_len)
+
+    def walk(tree, name=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        return jnp.zeros(tree, cache_leaf_dtype(cfg, name))
+
+    return walk(shapes)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
+                mesh_ctx=None, unroll: int = 1):
+    """(logits (B,1,V), new_cache). pos: scalar absolute position."""
+    if cfg.family == "encdec":
+        return ED.encdec_decode_step(cfg, params, cache, tokens, pos,
+                                     mesh_ctx=mesh_ctx, unroll=unroll)
+    return LM.lm_decode_step(cfg, params, cache, tokens, pos,
+                             mesh_ctx=mesh_ctx, unroll=unroll)
+
+
+# ---------------------------------------------------------------------------
+# Abstract input shapes (dry-run / input_specs)
+# ---------------------------------------------------------------------------
+
+
+def batch_shapes(cfg: ModelConfig, global_batch: int, seq_len: int
+                 ) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+    """{name: (shape, dtype)} for one *training* batch."""
+    out: Dict[str, Tuple[Tuple[int, ...], Any]] = {
+        "tokens": ((global_batch, seq_len), jnp.int32),
+        "targets": ((global_batch, seq_len), jnp.int32),
+    }
+    if cfg.frontend == "patch_embed":
+        out["patches"] = ((global_batch, cfg.frontend_len, cfg.frontend_dim),
+                          cfg.dtype)
+    elif cfg.frontend == "audio_frames":
+        out["frames"] = ((global_batch, cfg.frontend_len, cfg.d_model),
+                         cfg.dtype)
+    return out
+
+
+def make_dummy_batch(cfg: ModelConfig, global_batch: int, seq_len: int,
+                     rng: Optional[jax.Array] = None) -> Dict:
+    """Concrete random batch for smoke tests / examples."""
+    rng = rng if rng is not None else jax.random.key(0)
+    ks = jax.random.split(rng, 4)
+    batch: Dict[str, Any] = {
+        "tokens": jax.random.randint(ks[0], (global_batch, seq_len), 0,
+                                     cfg.vocab, jnp.int32),
+        "targets": jax.random.randint(ks[1], (global_batch, seq_len), 0,
+                                      cfg.vocab, jnp.int32),
+    }
+    if cfg.frontend == "patch_embed":
+        batch["patches"] = jax.random.normal(
+            ks[2], (global_batch, cfg.frontend_len, cfg.frontend_dim),
+            jnp.float32).astype(cfg.dtype)
+    elif cfg.frontend == "audio_frames":
+        batch["frames"] = jax.random.normal(
+            ks[2], (global_batch, cfg.frontend_len, cfg.d_model),
+            jnp.float32).astype(cfg.dtype)
+    return batch

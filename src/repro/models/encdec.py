@@ -1,0 +1,210 @@
+"""Encoder-decoder transformer (whisper-base backbone).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings ``(B, T_frames, d_model)`` (what whisper's two
+stride-2 convs would emit), so the encoder here is the transformer backbone
+only. Whisper uses pre-LN LayerNorm blocks, GELU MLPs, learned positions on
+the decoder, sinusoidal on the encoder, and MHA (kv == heads).
+
+The decoder caches both its self-attention KV (grows with decoding) and the
+cross-attention KV (computed once from the encoder output at prefill).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .common import ModelConfig, ParamSpec, p
+
+# ---------------------------------------------------------------------------
+# Spec
+# ---------------------------------------------------------------------------
+
+
+def _enc_layer_spec(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": L.norm_spec(cfg),
+        "attn": L.attention_spec(cfg),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def _dec_layer_spec(cfg: ModelConfig) -> Dict:
+    return {
+        "ln1": L.norm_spec(cfg),
+        "self_attn": L.attention_spec(cfg),
+        "ln_x": L.norm_spec(cfg),
+        "cross_q": L.attention_spec(cfg),       # wq/wo used; wk/wv unused
+        "cross_kv": L.cross_kv_spec(cfg),
+        "ln2": L.norm_spec(cfg),
+        "mlp": L.mlp_spec(cfg),
+    }
+
+
+def _stack(tree, n: int):
+    def walk(t):
+        if isinstance(t, dict):
+            return {k: walk(v) for k, v in t.items()}
+        s: ParamSpec = t
+        return ParamSpec((n,) + s.shape, ("layer",) + s.axes, s.init,
+                         s.scale, s.dtype)
+    return walk(tree)
+
+
+def encdec_spec(cfg: ModelConfig) -> Dict:
+    assert cfg.n_encoder_layers > 0
+    return {
+        "embed": L.embed_spec(cfg),
+        # decoder learned positions (whisper)
+        "pos_dec": p((cfg.max_seq_len, cfg.d_model), (None, "embed"),
+                     init="normal", scale=0.01),
+        "enc_stack": _stack(_enc_layer_spec(cfg), cfg.n_encoder_layers),
+        "ln_enc": L.norm_spec(cfg),
+        "dec_stack": _stack(_dec_layer_spec(cfg), cfg.n_layers),
+        "ln_f": L.norm_spec(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+
+def _sinusoid(n: int, d: int) -> np.ndarray:
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * dim / d)
+    return np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+
+
+def encode(cfg: ModelConfig, params, frames, *, mesh_ctx=None,
+           unroll: int = 1):
+    """frames: (B, T, d_model) stub frame embeddings -> (B, T, d_model)."""
+    B, T, d = frames.shape
+    h = frames.astype(cfg.dtype)
+    h = h + jnp.asarray(_sinusoid(T, d), cfg.dtype)[None]
+    positions = jnp.arange(T)[None, :]
+    if mesh_ctx is not None:
+        h = mesh_ctx.shard_activations(h)
+
+    def layer(h, prm):
+        x = L.norm(cfg, prm["ln1"], h)
+        a, _ = L.attention(cfg, prm["attn"], x, positions=positions,
+                           bidirectional=True, mesh_ctx=mesh_ctx)
+        h = h + a
+        h = h + L.mlp(cfg, prm["mlp"], L.norm(cfg, prm["ln2"], h), mesh_ctx)
+        if mesh_ctx is not None:
+            h = mesh_ctx.shard_activations(h)
+        return h
+
+    body = jax.checkpoint(lambda c, prm: (layer(c, prm), None))
+    h, _ = jax.lax.scan(body, h, params["enc_stack"], unroll=unroll)
+    return L.norm(cfg, params["ln_enc"], h)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_layer(cfg, prm, h, positions, cross_kv, *, cache=None,
+               cache_pos=None, mesh_ctx=None):
+    x = L.norm(cfg, prm["ln1"], h)
+    a, new_cache = L.attention(cfg, prm["self_attn"], x, positions=positions,
+                               cache=cache, cache_pos=cache_pos,
+                               mesh_ctx=mesh_ctx)
+    h = h + a
+    x = L.norm(cfg, prm["ln_x"], h)
+    c, _ = L.attention(cfg, prm["cross_q"], x, positions=positions,
+                       cross_kv=cross_kv, mesh_ctx=mesh_ctx)
+    h = h + c
+    h = h + L.mlp(cfg, prm["mlp"], L.norm(cfg, prm["ln2"], h), mesh_ctx)
+    return h, new_cache
+
+
+def decode_train(cfg: ModelConfig, params, tokens, enc_out, *, mesh_ctx=None,
+                 unroll: int = 1, last_logit_only: bool = False):
+    """Teacher-forced decoder pass. tokens: (B, S) -> logits (B, S, vocab)."""
+    B, S = tokens.shape
+    h = L.embed(cfg, params["embed"], tokens)
+    h = h + params["pos_dec"].astype(h.dtype)[:S][None]
+    positions = jnp.arange(S)[None, :]
+    if mesh_ctx is not None:
+        h = mesh_ctx.shard_activations(h)
+
+    def layer(h, prm):
+        ckv = L.make_cross_kv(prm["cross_kv"], enc_out)
+        h, _ = _dec_layer(cfg, prm, h, positions, ckv, mesh_ctx=mesh_ctx)
+        if mesh_ctx is not None:
+            h = mesh_ctx.shard_activations(h)
+        return h
+
+    body = jax.checkpoint(lambda c, prm: (layer(c, prm), None))
+    h, _ = jax.lax.scan(body, h, params["dec_stack"], unroll=unroll)
+    if last_logit_only:
+        h = h[:, -1:]
+    h = L.norm(cfg, params["ln_f"], h)
+    return L.unembed(cfg, params["embed"], h, mesh_ctx)
+
+
+def encdec_forward(cfg: ModelConfig, params, tokens, frames, *, mesh_ctx=None,
+                   unroll: int = 1, last_logit_only: bool = False):
+    enc_out = encode(cfg, params, frames, mesh_ctx=mesh_ctx, unroll=unroll)
+    return decode_train(cfg, params, tokens, enc_out, mesh_ctx=mesh_ctx,
+                        unroll=unroll, last_logit_only=last_logit_only)
+
+
+# ---------------------------------------------------------------------------
+# Incremental decode
+# ---------------------------------------------------------------------------
+
+
+def encdec_cache_shapes(cfg: ModelConfig, batch: int, max_seq: int,
+                        enc_len: int) -> Dict:
+    nL = cfg.n_layers
+    kv = (nL, batch, max_seq, cfg.kv_heads, cfg.d_head)
+    ckv = (nL, batch, enc_len, cfg.kv_heads, cfg.d_head)
+    return {"k": kv, "v": kv, "ck": ckv, "cv": ckv}
+
+
+def encdec_prefill_cache(cfg: ModelConfig, params, enc_out, batch: int,
+                         max_seq: int):
+    """Precompute per-layer cross KV from the encoder output; allocate the
+    self-attention cache."""
+    ck, cv = jax.vmap(lambda prm: L.make_cross_kv(prm, enc_out))(
+        params["dec_stack"]["cross_kv"])
+    nL = cfg.n_layers
+    kv = jnp.zeros((nL, batch, max_seq, cfg.kv_heads, cfg.d_head), cfg.dtype)
+    return {"k": kv, "v": kv, "ck": ck.astype(cfg.dtype),
+            "cv": cv.astype(cfg.dtype)}
+
+
+def encdec_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
+                       mesh_ctx=None, unroll: int = 1):
+    """One decode token. tokens: (B,1); pos: scalar. Returns (logits, cache)."""
+    B = tokens.shape[0]
+    h = L.embed(cfg, params["embed"], tokens)
+    h = h + jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"].astype(h.dtype), pos, 1, axis=0)[None, 0:1]
+    positions = jnp.full((1, 1), pos, jnp.int32)
+
+    def layer(h, xs):
+        prm, ck, cv, k, v = xs
+        h, nc = _dec_layer(cfg, prm, h, positions, (ck, cv),
+                           cache={"k": k, "v": v}, cache_pos=pos,
+                           mesh_ctx=mesh_ctx)
+        return h, (nc["k"], nc["v"])
+
+    h, (nk, nv) = jax.lax.scan(
+        layer, h,
+        (params["dec_stack"], cache["ck"], cache["cv"], cache["k"],
+         cache["v"]),
+        unroll=unroll)
+    h = L.norm(cfg, params["ln_f"], h)
+    logits = L.unembed(cfg, params["embed"], h, mesh_ctx)
+    return logits, {"k": nk, "v": nv, "ck": cache["ck"], "cv": cache["cv"]}

@@ -1,0 +1,334 @@
+"""Shared layers: norms, RoPE, embeddings, attention (GQA, sliding-window,
+softcap, bias), MLPs. Pure functions over param dicts; fp32 where numerics
+demand it (norms, softmax, rope), bf16 elsewhere.
+
+Sequence-dim sharding constraints (SP) are applied by the caller via
+``repro.sharding.constrain`` so the layer code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, p
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(dim: int):
+    return {"scale": p((dim,), ("embed",), init="zeros")}  # (1+scale) param.
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_spec(dim: int):
+    return {"scale": p((dim,), ("embed",), init="ones"),
+            "bias": p((dim,), ("embed",), init="zeros")}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_spec(cfg: ModelConfig, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    return layernorm_spec(dim) if cfg.norm == "layernorm" else rmsnorm_spec(dim)
+
+
+def norm(cfg: ModelConfig, params, x):
+    return layernorm(params, x) if cfg.norm == "layernorm" else rmsnorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_spec(cfg: ModelConfig, cross: bool = False) -> Dict:
+    d, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.d_head
+    spec = {
+        "wq": p((d, H, Dh), ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": p((d, KV, Dh), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wv": p((d, KV, Dh), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wo": p((H, Dh, d), ("heads", "head_dim", "embed"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = p((H, Dh), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = p((KV, Dh), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = p((KV, Dh), ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+def _qkv(cfg: ModelConfig, params, xq, xkv):
+    q = jnp.einsum("bsd,dhk->bshk", xq, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,Skv,KV,D); mask: (B|1, 1, Sq, Skv) bool."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    groups = H // KV
+    qg = q.reshape(B, Sq, KV, groups, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(D)
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    logits = jnp.where(mask[:, :, None, :, :] if mask.ndim == 4 else mask,
+                       logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def causal_mask(Sq: int, Skv: int, q_offset=0, window: Optional[int] = None):
+    """(1,1,Sq,Skv) bool. ``q_offset``: absolute position of query 0 (may be
+    a traced scalar). ``window``: sliding window (local attention)."""
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def _use_chunked(cfg: ModelConfig, Sq: int) -> bool:
+    if cfg.attn_impl == "chunked":
+        return True
+    if cfg.attn_impl == "xla":
+        return False
+    return Sq > 2048  # auto: full logits past 2k are prohibitive
+
+
+def _tp_qkv_constraints(mesh_ctx, q, k, v):
+    """Inside the TP region: heads over model, batch over data. When the
+    head count does not divide the model axis (qwen2: 28H, whisper: 8H on
+    TP=16), fall back to CONTEXT parallelism for long inputs: queries
+    sharded over model along the sequence (each rank attends its query
+    slice against replicated KV) — otherwise a 32k prefill keeps full
+    (B, S, H, D) projections replicated on every chip."""
+    dp, mdl = mesh_ctx.data_axes, mesh_ctx.model_axis
+    tp = mesh_ctx.tp_size
+    H = q.shape[2]
+    if H % max(tp, 1) == 0 or tp <= 1:
+        q = mesh_ctx.constrain_dims(q, (dp, None, mdl, None))
+        k = mesh_ctx.constrain_dims(k, (dp, None, mdl, None))
+        v = mesh_ctx.constrain_dims(v, (dp, None, mdl, None))
+    elif q.shape[1] > 1 and q.shape[1] % tp == 0:
+        q = mesh_ctx.constrain_dims(q, (dp, mdl, None, None))
+        k = mesh_ctx.constrain_dims(k, (dp, None, None, None))
+        v = mesh_ctx.constrain_dims(v, (dp, None, None, None))
+    return q, k, v
+
+
+def attention(cfg: ModelConfig, params, x, *, positions, window=None,
+              cache: Optional[Dict] = None, cache_pos=None,
+              cache_valid_len=None,
+              cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+              bidirectional: bool = False, prefix_len: int = 0,
+              mesh_ctx=None):
+    """Full attention layer (proj → rope → sdpa → proj).
+
+    Modes:
+      * training/prefill: cache=None, causal (or bidirectional for encoders)
+      * decode: ``cache`` = {"k","v"} (B, S_cache, KV, D); the new token is
+        written at slot ``cache_pos`` (callers pass ``pos % window`` for
+        rolling local-attention caches) and attends to the first
+        ``cache_valid_len`` slots. Keys keep the RoPE phase of the absolute
+        position they were written with, so slot order is irrelevant.
+      * cross: ``cross_kv`` provides precomputed (k, v) from the encoder.
+    Returns (out, new_cache).
+    """
+    B, Sq, d = x.shape
+    if mesh_ctx is not None:
+        x = mesh_ctx.gather_seq(x)     # SP all-gather on TP-region entry
+    if cross_kv is not None:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+        if cfg.qkv_bias:
+            q = q + params["bq"]
+        k, v = cross_kv
+        if mesh_ctx is not None:
+            q, k, v = _tp_qkv_constraints(mesh_ctx, q, k, v)
+        mask = jnp.ones((1, 1, Sq, k.shape[1]), bool)
+        out = _sdpa(cfg, q, k, v, mask)
+        return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), cache
+
+    q, k, v = _qkv(cfg, params, x, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if mesh_ctx is not None:
+        q, k, v = _tp_qkv_constraints(mesh_ctx, q, k, v)
+
+    if cache is not None:
+        if getattr(cache_pos, "ndim", 0) == 1:
+            # per-slot positions (continuous batching): scatter writes
+            bidx = jnp.arange(B)
+            ck = cache["k"].at[bidx, cache_pos].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, cache_pos].set(
+                v[:, 0].astype(cache["v"].dtype))
+            Skv = ck.shape[1]
+            valid = (cache_pos + Sq if cache_valid_len is None
+                     else cache_valid_len)
+            m = jnp.arange(Skv)[None, :] < valid[:, None]       # (B, Skv)
+            out = _sdpa(cfg, q, ck, cv, m[:, None, None, :])
+        else:
+            # bulk decode: one shared position, dynamic-update-slice
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+            Skv = ck.shape[1]
+            if cache_valid_len is None:
+                cache_valid_len = cache_pos + Sq
+            m = jnp.arange(Skv)[None, :] < cache_valid_len
+            out = _sdpa(cfg, q, ck, cv, m[None, None, :, :])
+        new_cache = {"k": ck, "v": cv}
+    else:
+        if _use_chunked(cfg, Sq):
+            from .attention import chunked_attention
+            out = chunked_attention(
+                q, k, v, causal=not bidirectional, window=window,
+                softcap=cfg.attn_logit_softcap, prefix_len=prefix_len,
+                q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+                exact_causal=cfg.exact_causal)
+        else:
+            if bidirectional:
+                mask = jnp.ones((1, 1, Sq, Sq), bool)
+            else:
+                qpos = jnp.arange(Sq)[:, None]
+                kpos = jnp.arange(Sq)[None, :]
+                m = kpos <= qpos
+                if window is not None:
+                    m &= kpos > qpos - window
+                if prefix_len:
+                    m |= kpos < prefix_len
+                mask = m[None, None]
+            out = _sdpa(cfg, q, k, v, mask)
+        new_cache = None
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new_cache
+
+
+def cross_kv_spec(cfg: ModelConfig):
+    """Encoder-side projections for cross attention (computed once)."""
+    return {
+        "wk": p((cfg.d_model, cfg.kv_heads, cfg.d_head),
+                ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wv": p((cfg.d_model, cfg.kv_heads, cfg.d_head),
+                ("embed", "kv_heads", "head_dim"), init="scaled"),
+    }
+
+
+def make_cross_kv(params, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"])
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.act in ("swiglu", "geglu"):
+        return {"wi": p((d, 2, f), ("embed", None, "ff"), init="scaled"),
+                "wo": p((f, d), ("ff", "embed"), init="scaled")}
+    return {"wi": p((d, 1, f), ("embed", None, "ff"), init="scaled"),
+            "wo": p((f, d), ("ff", "embed"), init="scaled")}
+
+
+def mlp(cfg: ModelConfig, params, x, mesh_ctx=None):
+    if mesh_ctx is not None:
+        x = mesh_ctx.gather_seq(x)     # SP all-gather on TP-region entry
+    h = jnp.einsum("bsd,dcf->bscf", x, params["wi"])
+    if mesh_ctx is not None:
+        # Megatron TP: intermediate sharded over model along d_ff — the
+        # second matmul then emits partial sums that reduce-scatter back
+        # into the SP layout at the residual add.
+        h = mesh_ctx.constrain_dims(
+            h, (mesh_ctx.data_axes, None, None, mesh_ctx.model_axis))
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(h[..., 0, :], approximate=True) * h[..., 1, :]
+    else:
+        h = jax.nn.gelu(h[..., 0, :], approximate=True)
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_spec(cfg: ModelConfig) -> Dict:
+    spec = {"tok": p((cfg.vocab, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        spec["unembed"] = p((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return spec
+
+
+def embed(cfg: ModelConfig, params, tokens):
+    h = params["tok"].astype(cfg.dtype)[tokens]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    return h
+
+
+def unembed(cfg: ModelConfig, params, h, mesh_ctx=None):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["tok"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["unembed"])
+    if mesh_ctx is not None:
+        # vocab-parallel logits: the unembedding stays sharded over model;
+        # the CE loss's logsumexp/gather psum over the vocab shards.
+        logits = mesh_ctx.constrain_dims(
+            logits, (mesh_ctx.data_axes, None, mesh_ctx.model_axis))
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = (c * jnp.tanh(logits.astype(jnp.float32) / c)).astype(logits.dtype)
+    return logits

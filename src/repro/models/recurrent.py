@@ -1,0 +1,324 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma) and RWKV6
+(Finch). Both are linear recurrences, implemented so that
+
+* training-shape FLOPs live in batched einsums *outside* any sequential
+  loop (XLA's cost model counts loop bodies once — see DESIGN.md §8), and
+* decode is a cheap O(1)-state single-step update.
+
+RWKV6 uses the chunked linear-attention form with per-channel decays; the
+per-chunk exponent shift keeps everything in fp32 range (log-decay is
+clamped to [-5, -1e-6] and chunks are 16 tokens).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, p
+
+# ---------------------------------------------------------------------------
+# RG-LRU  (Griffin, arXiv:2402.19427, adapted per RecurrentGemma)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+_NB = 16  # block-diagonal gate blocks (recurrentgemma: per-head)
+
+
+def rglru_block_spec(cfg: ModelConfig) -> Dict:
+    d, W = cfg.d_model, cfg.lru_width
+    bs = W // _NB
+    return {
+        "w_x": p((d, W), ("embed", "rnn"), init="scaled"),
+        "w_y": p((d, W), ("embed", "rnn"), init="scaled"),
+        "conv_w": p((cfg.conv_width, W), (None, "rnn"), init="scaled"),
+        "conv_b": p((W,), ("rnn",), init="zeros"),
+        "gate_a": p((_NB, bs, bs), ("rnn_blocks", None, None), init="scaled"),
+        "gate_x": p((_NB, bs, bs), ("rnn_blocks", None, None), init="scaled"),
+        "lam": p((W,), ("rnn",), init="normal", scale=0.5),
+        "w_out": p((W, d), ("rnn", "embed"), init="scaled"),
+    }
+
+
+def _blockdiag(x, w):
+    """x: (..., W) @ block-diagonal w: (NB, bs, bs) -> (..., W)."""
+    shape = x.shape
+    xb = x.reshape(shape[:-1] + (_NB, shape[-1] // _NB))
+    yb = jnp.einsum("...nb,nbc->...nc", xb, w)
+    return yb.reshape(shape)
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv over time. x: (B,S,W); w: (K,W).
+    ``state``: (B,K-1,W) trailing context for decode; returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[K - 1 - i] for i in range(K))
+    return y + b, xp[:, -(K - 1):, :]
+
+
+def _rglru_coeffs(params, x):
+    """x: (B,S,W) fp32 -> (log_a, b_in) of the recurrence
+    h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * (i_t * x_t)."""
+    r = jax.nn.sigmoid(_blockdiag(x, params["gate_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_blockdiag(x, params["gate_x"].astype(jnp.float32)))
+    # a = sigmoid(lam)^(c*r)  ->  log a = -c * r * softplus(-lam)
+    lam = params["lam"].astype(jnp.float32) + 2.0   # bias toward slow decay
+    log_a = -_RGLRU_C * r * jax.nn.softplus(-lam)
+    b_in = jnp.sqrt(-jnp.expm1(2.0 * log_a)) * (i * x)
+    return log_a, b_in
+
+
+def rglru_scan(params, x):
+    """Training/prefill path. x: (B,S,W) -> (B,S,W); returns (y, h_last)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    log_a, b_in = _rglru_coeffs(params, x)
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    return h.astype(dt), h[:, -1, :]
+
+
+def rglru_step(params, x, h_prev):
+    """Decode: x (B,1,W), h_prev (B,W) -> (y (B,1,W), h (B,W))."""
+    xf = x.astype(jnp.float32)
+    log_a, b_in = _rglru_coeffs(params, xf)
+    a = jnp.exp(log_a)
+    h = a[:, 0] * h_prev.astype(jnp.float32) + b_in[:, 0]
+    return h[:, None, :].astype(x.dtype), h
+
+
+def rglru_block(cfg: ModelConfig, params, x, *, state: Optional[Dict] = None,
+                mesh_ctx=None):
+    """The Griffin recurrent block: in-proj → causal conv → RG-LRU, gated.
+    x: (B,S,d). ``state`` = {"conv": (B,K-1,W), "h": (B,W)} for decode.
+    Returns (out (B,S,d), new_state)."""
+    if mesh_ctx is not None:
+        x = mesh_ctx.gather_seq(x)
+    rec = jnp.einsum("bsd,dw->bsw", x, params["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_y"]),
+                       approximate=True)
+    if mesh_ctx is not None:
+        # TP: the recurrence is elementwise over the lru width — shard it
+        dims = (mesh_ctx.data_axes, None, mesh_ctx.model_axis)
+        rec = mesh_ctx.constrain_dims(rec, dims)
+        gate = mesh_ctx.constrain_dims(gate, dims)
+    conv_state = state["conv"] if state is not None else None
+    rec, new_conv = _causal_conv(rec, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    if state is None:
+        h, h_last = rglru_scan(params, rec)
+    else:
+        h, h_last = rglru_step(params, rec, state["h"])
+    out = jnp.einsum("bsw,wd->bsd", h * gate, params["w_out"])
+    new_state = {"conv": new_conv.astype(x.dtype), "h": h_last}
+    return out, new_state
+
+
+def rglru_state_shape(cfg: ModelConfig, batch: int):
+    W = cfg.lru_width
+    return {"conv": (batch, cfg.conv_width - 1, W), "h": (batch, W)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6  (Finch, arXiv:2404.05892; structure-faithful, see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+_RWKV_CHUNK = 16
+_LOGW_MIN, _LOGW_MAX = -5.0, -1e-6
+_LORA_DIM = 64
+
+
+def rwkv_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    """(n_heads, head_dim). We size heads to the TP degree (16); the
+    assignment fixes only d_model/d_ff/vocab for rwkv6-3b."""
+    H = 16 if cfg.d_model % 16 == 0 else 8
+    return H, cfg.d_model // H
+
+
+def rwkv_time_mix_spec(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H, N = rwkv_heads(cfg)
+    return {
+        "mu_r": p((d,), ("embed",), init="zeros"),
+        "mu_k": p((d,), ("embed",), init="zeros"),
+        "mu_v": p((d,), ("embed",), init="zeros"),
+        "mu_g": p((d,), ("embed",), init="zeros"),
+        "mu_w": p((d,), ("embed",), init="zeros"),
+        "wr": p((d, H, N), ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": p((d, H, N), ("embed", "heads", "head_dim"), init="scaled"),
+        "wv": p((d, H, N), ("embed", "heads", "head_dim"), init="scaled"),
+        "wg": p((d, H, N), ("embed", "heads", "head_dim"), init="scaled"),
+        "w0": p((H, N), ("heads", "head_dim"), init="zeros"),
+        "lora_wA": p((d, _LORA_DIM), ("embed", None), init="scaled"),
+        "lora_wB": p((_LORA_DIM, H, N), (None, "heads", "head_dim"),
+                     init="scaled"),
+        "u": p((H, N), ("heads", "head_dim"), init="normal", scale=0.5),
+        "ln_out": p((H, N), ("heads", "head_dim"), init="zeros"),
+        "wo": p((H, N, d), ("heads", "head_dim", "embed"), init="scaled"),
+    }
+
+
+def _shift(x, state=None):
+    """Token shift: x_{t-1}, with optional (B,d) carry-in for decode."""
+    if state is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([state[:, None, :].astype(x.dtype),
+                                x[:, :-1]], axis=1)
+    return prev
+
+
+def _rwkv_proj(cfg, params, x, xprev):
+    def mix(mu):
+        return x + (xprev - x) * mu.astype(x.dtype)
+
+    r = jnp.einsum("bsd,dhn->bshn", mix(params["mu_r"]), params["wr"])
+    k = jnp.einsum("bsd,dhn->bshn", mix(params["mu_k"]), params["wk"])
+    v = jnp.einsum("bsd,dhn->bshn", mix(params["mu_v"]), params["wv"])
+    g = jnp.einsum("bsd,dhn->bshn", mix(params["mu_g"]), params["wg"])
+    xw = mix(params["mu_w"]).astype(jnp.float32)
+    lora = jnp.einsum("bsl,lhn->bshn",
+                      jnp.tanh(xw @ params["lora_wA"].astype(jnp.float32)),
+                      params["lora_wB"].astype(jnp.float32))
+    logw = -jnp.exp(params["w0"].astype(jnp.float32) + lora)
+    logw = jnp.clip(logw, _LOGW_MIN, _LOGW_MAX)
+    return r, k, v, g, logw
+
+
+def _rwkv_out(cfg, params, wkv, g, B, S):
+    """Per-head RMS-norm, gate, out-projection. wkv: (B,S,H,N)."""
+    xf = wkv.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + 1e-6)
+    xf = xf * (1.0 + params["ln_out"].astype(jnp.float32))
+    out = xf.astype(wkv.dtype) * jax.nn.silu(g)
+    return jnp.einsum("bshn,hnd->bsd", out, params["wo"])
+
+
+def rwkv_time_mix(cfg: ModelConfig, params, x, *, state: Optional[Dict] = None,
+                  mesh_ctx=None):
+    """x: (B,S,d). state = {"shift": (B,d), "S": (B,H,N,N) fp32} for decode.
+    Returns (out, new_state)."""
+    if mesh_ctx is not None:
+        x = mesh_ctx.gather_seq(x)
+    B, S, d = x.shape
+    H, N = rwkv_heads(cfg)
+    xprev = _shift(x, None if state is None else state["shift"])
+    r, k, v, g, logw = _rwkv_proj(cfg, params, x, xprev)
+    if mesh_ctx is not None:
+        # TP over rwkv heads: wkv recurrence is independent per head
+        dims = (mesh_ctx.data_axes, None, mesh_ctx.model_axis, None)
+        r, k, v, g = (mesh_ctx.constrain_dims(t, dims) for t in (r, k, v, g))
+    u = params["u"].astype(jnp.float32)
+
+    if state is not None:                      # single-token decode
+        rf, kf, vf = (t.astype(jnp.float32)[:, 0] for t in (r, k, v))
+        S_prev = state["S"]                    # (B,H,N,N) fp32
+        # out_t = r (S_prev + u ⊙ k v^T);  S = diag(w) S_prev + k v^T
+        kv = jnp.einsum("bhn,bhm->bhnm", kf, vf)
+        out = jnp.einsum("bhn,bhnm->bhm", rf, S_prev + u[None, :, :, None] * kv)
+        S_new = jnp.exp(logw[:, 0])[..., None] * S_prev + kv
+        wkv = out[:, None].astype(x.dtype).reshape(B, 1, H, N)
+        y = _rwkv_out(cfg, params, wkv, g, B, S)
+        return y, {"shift": x[:, -1, :], "S": S_new}
+
+    # ---- chunked training/prefill path (fp32 core) -------------------------
+    C = _RWKV_CHUNK
+    S_p = -(-S // C) * C
+    if S_p != S:
+        # state-invariant padding: k=0 contributes nothing, logw=0 decays
+        # nothing; padded outputs are sliced off below
+        pad = ((0, 0), (0, S_p - S), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+        logw = jnp.pad(logw, pad)
+    nc = S_p // C
+
+    def chunked(t):
+        return t.astype(jnp.float32).reshape(B, nc, C, H, N)
+
+    rc, kc, vc, lw = chunked(r), chunked(k), chunked(v), chunked(logw)
+    lc = jnp.cumsum(lw, axis=2)                         # inclusive log-decay
+    lce = lc - lw                                       # exclusive
+    a0 = lc[:, :, :1]                                   # per-chunk shift
+    q_in = rc * jnp.exp(lce - a0)                       # bounded exponents
+    k_in = kc * jnp.exp(a0 - lc)
+    scores = jnp.einsum("bcthn,bcjhn->bchtj", q_in, k_in)
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)       # strict lower
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    out_intra = jnp.einsum("bchtj,bcjhn->bcthn", scores, vc)
+    # current-token bonus
+    bonus = jnp.einsum("bcthn,bcthn->bcth", rc, u[None, None, None] * kc)
+    out_intra = out_intra + bonus[..., None] * vc
+    # chunk summaries: D = decay over the chunk; M = sum decayed k v^T
+    last = lc[:, :, -1:]                                # (B,nc,1,H,N)
+    Dc = jnp.exp(last[:, :, 0])                         # (B,nc,H,N)
+    k_out = kc * jnp.exp(last - lc)
+    Mc = jnp.einsum("bcthn,bcthm->bchnm", k_out, vc)    # (B,nc,H,N,N)
+
+    def combine(x1, x2):
+        d1, m1 = x1
+        d2, m2 = x2
+        return d1 * d2, d2[..., None] * m1 + m2
+
+    Dcum, Mcum = jax.lax.associative_scan(combine, (Dc, Mc), axis=1)
+    # state entering chunk c = cumulative through c-1 (exclusive shift)
+    S_prev = jnp.pad(Mcum, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    out_inter = jnp.einsum("bcthn,bchnm->bcthm", q_in * jnp.exp(a0), S_prev)
+    wkv = (out_intra + out_inter).reshape(B, S_p, H, N)[:, :S].astype(x.dtype)
+    y = _rwkv_out(cfg, params, wkv, g, B, S)
+    new_state = {"shift": x[:, -1, :], "S": Mcum[:, -1]}
+    return y, new_state
+
+
+def rwkv_channel_mix_spec(cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": p((d,), ("embed",), init="zeros"),
+        "mu_r": p((d,), ("embed",), init="zeros"),
+        "wk": p((d, f), ("embed", "ff"), init="scaled"),
+        "wv": p((f, d), ("ff", "embed"), init="scaled"),
+        "wr": p((d, d), ("embed", None), init="scaled"),
+    }
+
+
+def rwkv_channel_mix(cfg: ModelConfig, params, x, *,
+                     state: Optional[jax.Array] = None, mesh_ctx=None):
+    """RWKV6 FFN with token shift. state: (B,d) last token (decode)."""
+    if mesh_ctx is not None:
+        x = mesh_ctx.gather_seq(x)
+    xprev = _shift(x, state)
+
+    def mix(mu):
+        return x + (xprev - x) * mu.astype(x.dtype)
+
+    kx = jnp.einsum("bsd,df->bsf", mix(params["mu_k"]), params["wk"])
+    if mesh_ctx is not None:
+        kx = mesh_ctx.constrain_dims(
+            kx, (mesh_ctx.data_axes, None, mesh_ctx.model_axis))
+    kx = jnp.square(jax.nn.relu(kx))
+    vx = jnp.einsum("bsf,fd->bsd", kx, params["wv"])
+    rx = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", mix(params["mu_r"]),
+                                   params["wr"]))
+    return rx * vx, x[:, -1, :]
+
+
+def rwkv_state_shape(cfg: ModelConfig, batch: int):
+    H, N = rwkv_heads(cfg)
+    return {
+        "tm_shift": (batch, cfg.d_model),
+        "S": (batch, H, N, N),
+        "cm_shift": (batch, cfg.d_model),
+    }

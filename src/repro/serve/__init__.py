@@ -1,0 +1,6 @@
+"""repro.serve — continuous-batching engine over a LERC-evicted radix
+prefix cache (the paper's all-or-nothing property on KV block chains)."""
+from .engine import Request, ServeEngine
+from .prefix_store import Node, PrefixStore
+
+__all__ = ["Request", "ServeEngine", "Node", "PrefixStore"]

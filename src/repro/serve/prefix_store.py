@@ -1,0 +1,203 @@
+"""Radix prefix cache with LERC eviction — the paper's idea, 8 years later.
+
+A served request hits the KV prefix cache only if **every** block along
+its prefix chain is resident: a resident block whose ancestor was evicted
+is useless (prefill must restart at the first gap). That is precisely the
+paper's all-or-nothing property with peer-groups generalized to *chains*:
+
+* peer group of request r  = the chain of blocks root→leaf(r);
+* a reference of block b by request r is EFFECTIVE iff every ancestor of
+  b on r's chain is resident (Def. 2, chain form);
+* LERC evicts the resident block with the fewest effective references,
+  deepest-first on ties (evicting a leaf never breaks another chain).
+
+Baselines for the benchmark: LRU (recency of block touch) and LRC (plain
+reference count = #queued requests whose chain contains the block,
+resident-ancestors or not).
+
+Payloads are per-block KV arrays (host memory); the engine copies the hit
+chain into a device slot at admission, so a longer effective chain is
+exactly fewer prefill FLOPs (measured, not simulated).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+TokenBlock = Tuple[int, ...]
+
+
+@dataclass
+class Node:
+    key: TokenBlock                      # the tokens of this block
+    parent: Optional["Node"]
+    payload: Any = None                  # per-layer KV arrays (host)
+    nbytes: int = 0
+    resident: bool = False
+    children: Dict[TokenBlock, "Node"] = field(default_factory=dict)
+    last_touch: int = 0
+    uid: int = 0
+
+    def depth(self) -> int:
+        d, n = 0, self
+        while n.parent is not None:
+            d, n = d + 1, n.parent
+        return d
+
+
+class PrefixStore:
+    def __init__(self, capacity_bytes: int, policy: str = "lerc",
+                 block_tokens: int = 16) -> None:
+        assert policy in ("lru", "lrc", "lerc")
+        self.capacity = capacity_bytes
+        self.policy = policy
+        self.block_tokens = block_tokens
+        self.root = Node(key=(), parent=None, resident=True)
+        self.used = 0
+        self._clock = itertools.count(1)
+        self._uids = itertools.count(1)
+        # outstanding (queued/admitted-not-yet-prefilled) request chains
+        self._pending: Dict[int, List[Node]] = {}
+        self._req_ids = itertools.count(1)
+        # metrics
+        self.accesses = 0
+        self.hits = 0
+        self.effective_hits = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------ structure
+    def _blocks(self, tokens: Sequence[int]) -> List[TokenBlock]:
+        bt = self.block_tokens
+        return [tuple(tokens[i:i + bt])
+                for i in range(0, len(tokens) - len(tokens) % bt, bt)]
+
+    def _walk(self, tokens: Sequence[int], create: bool = False
+              ) -> List[Node]:
+        """Nodes along the chain for ``tokens`` (existing, or created
+        skeleton nodes when ``create``)."""
+        chain: List[Node] = []
+        node = self.root
+        for key in self._blocks(tokens):
+            child = node.children.get(key)
+            if child is None:
+                if not create:
+                    break
+                child = Node(key=key, parent=node, uid=next(self._uids))
+                node.children[key] = child
+            chain.append(child)
+            node = child
+        return chain
+
+    # ------------------------------------------------------------- requests
+    def register_request(self, tokens: Sequence[int]) -> int:
+        """Announce a request (queued). Its chain contributes reference
+        counts until ``complete_request``. Returns a request id."""
+        rid = next(self._req_ids)
+        self._pending[rid] = self._walk(tokens, create=True)
+        return rid
+
+    def complete_request(self, rid: int) -> None:
+        self._pending.pop(rid, None)
+
+    # ---------------------------------------------------------------- reads
+    def lookup(self, tokens: Sequence[int]) -> List[Node]:
+        """Longest fully-resident chain from the root (the usable prefix).
+        Records per-block hit/effective-hit metrics along the way."""
+        chain = self._walk(tokens)
+        usable: List[Node] = []
+        broken = False
+        t = next(self._clock)
+        for node in chain:
+            self.accesses += 1
+            if node.resident:
+                self.hits += 1
+                if not broken:
+                    self.effective_hits += 1
+                    usable.append(node)
+                node.last_touch = t
+            if not node.resident:
+                broken = True
+        return usable
+
+    # --------------------------------------------------------------- writes
+    def insert(self, tokens: Sequence[int], payloads: List[Any],
+               nbytes_per_block: int) -> None:
+        """Store KV payloads for the chain of ``tokens`` (post-prefill)."""
+        chain = self._walk(tokens, create=True)
+        t = next(self._clock)
+        for node, payload in zip(chain, payloads):
+            if node.resident:
+                continue
+            self._make_room(nbytes_per_block, exclude=set(
+                n.uid for n in chain))
+            node.payload = payload
+            node.nbytes = nbytes_per_block
+            node.resident = True
+            node.last_touch = t
+            self.used += nbytes_per_block
+
+    # -------------------------------------------------------------- counts
+    def _ref_counts(self) -> Tuple[Dict[int, int], Dict[int, int]]:
+        """(plain reference count, effective reference count) per node uid,
+        over the pending request chains."""
+        rc: Dict[int, int] = {}
+        erc: Dict[int, int] = {}
+        for chain in self._pending.values():
+            broken = False
+            for node in chain:
+                rc[node.uid] = rc.get(node.uid, 0) + 1
+                if not node.resident:
+                    broken = True
+                if not broken:
+                    # every block up to here has all ancestors resident
+                    erc[node.uid] = erc.get(node.uid, 0) + 1
+        return rc, erc
+
+    def _resident_nodes(self) -> List[Node]:
+        out: List[Node] = []
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n is not self.root and n.resident:
+                out.append(n)
+        return out
+
+    def _make_room(self, needed: int, exclude: set) -> None:
+        while self.used + needed > self.capacity:
+            victims = [n for n in self._resident_nodes()
+                       if n.uid not in exclude]
+            if not victims:
+                return
+            rc, erc = self._ref_counts()
+            if self.policy == "lru":
+                key = lambda n: (n.last_touch, -n.depth())
+            elif self.policy == "lrc":
+                key = lambda n: (rc.get(n.uid, 0), n.last_touch)
+            else:  # lerc: fewest effective refs; deepest first on ties
+                key = lambda n: (erc.get(n.uid, 0), rc.get(n.uid, 0),
+                                 -n.depth(), n.last_touch)
+            victim = min(victims, key=key)
+            self._evict(victim)
+
+    def _evict(self, node: Node) -> None:
+        node.resident = False
+        node.payload = None
+        self.used -= node.nbytes
+        node.nbytes = 0
+        self.evictions += 1
+        # a resident chain through this node is now broken for descendants;
+        # ERC of descendants drops automatically via _ref_counts (the
+        # "complete -> incomplete" flip of the paper's protocol)
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, float]:
+        return {
+            "accesses": self.accesses,
+            "hit_ratio": self.hits / self.accesses if self.accesses else 0.0,
+            "effective_hit_ratio": (self.effective_hits / self.accesses
+                                    if self.accesses else 0.0),
+            "evictions": self.evictions,
+            "used_bytes": self.used,
+        }

@@ -1,0 +1,4 @@
+"""repro.sharding — logical-axis partition rules (DP/FSDP/TP/EP/SP)."""
+from .rules import LOGICAL_RULES, MeshContext, local_context
+
+__all__ = ["LOGICAL_RULES", "MeshContext", "local_context"]

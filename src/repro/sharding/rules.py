@@ -1,0 +1,249 @@
+"""Logical-axis → PartitionSpec rules for the production mesh.
+
+Parameters carry logical axis names (``ParamSpec.axes``); this module maps
+them onto the physical mesh:
+
+* TP axes (``heads``, ``kv_heads``, ``ff``, ``vocab``, ``experts``,
+  ``rnn``, ``rnn_blocks``) shard over ``model``.
+* ``embed`` shards over the FSDP axes (``("pod","data")`` multi-pod,
+  ``("data",)`` single-pod) — ZeRO-3: all-gather on use, reduce-scatter on
+  grad, both inserted by XLA SPMD from the shardings.
+* ``layer`` (the scan-stack axis) stays replicated.
+
+Every assignment is divisibility-checked against the mesh and each mesh
+axis is used at most once per tensor; dims that do not divide are left
+replicated (XLA handles the rest). This keeps the same rule table valid
+from the 4-device CI mesh to the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import ModelConfig, ParamSpec
+
+# logical axis -> candidate physical axis group, in priority order
+LOGICAL_RULES: Dict[str, Tuple[str, ...]] = {
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "rnn": ("model",),
+    "rnn_blocks": ("model",),
+    "embed": ("fsdp",),
+    "head_dim": (),
+    "layer": (),
+}
+
+
+@dataclass
+class MeshContext:
+    """Everything the model/step code needs to know about the mesh."""
+
+    mesh: Optional[Mesh]
+    data_axes: Tuple[str, ...] = ("data",)     # batch / FSDP axes
+    model_axis: str = "model"
+    seq_shard: bool = True                     # SP: shard seq dim over model
+    fsdp_params: bool = True                   # ZeRO-3 parameter sharding
+
+    # ------------------------------------------------------------------ sizes
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape[name] if self.mesh else 1
+
+    @property
+    def dp_size(self) -> int:
+        return int(np.prod([self.axis_size(a) for a in self.data_axes]))
+
+    @property
+    def tp_size(self) -> int:
+        return self.axis_size(self.model_axis)
+
+    def _expand(self, group: str) -> Tuple[str, ...]:
+        if group == "fsdp":
+            return self.data_axes if self.fsdp_params else ()
+        return (group,)
+
+    # ------------------------------------------------------------- param spec
+    def param_pspec(self, spec: ParamSpec, fsdp: Optional[bool] = None) -> P:
+        """PartitionSpec for one parameter from its logical axes.
+        ``fsdp=False`` drops the FSDP axes (the *gathered* per-layer layout
+        a weight takes while its layer executes)."""
+        used: set = set()
+        out = []
+        fsdp_on = self.fsdp_params if fsdp is None else fsdp
+        for dim, logical in zip(spec.shape, spec.axes):
+            assigned: Any = None
+            if logical is not None:
+                for group in LOGICAL_RULES.get(logical, ()):
+                    axes = (self.data_axes if fsdp_on else ()) \
+                        if group == "fsdp" else (group,)
+                    if not axes or any(a in used for a in axes):
+                        continue
+                    size = int(np.prod([self.axis_size(a) for a in axes]))
+                    if size > 1 and dim % size == 0:
+                        assigned = axes if len(axes) > 1 else axes[0]
+                        used.update(axes)
+                        break
+            out.append(assigned)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def param_sharding(self, spec: ParamSpec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.param_pspec(spec))
+
+    def constrain_tree(self, tree, spec_tree, fsdp: Optional[bool] = None):
+        """Pin a (possibly per-layer-sliced) param tree to its rule-derived
+        shardings. Used INSIDE scan bodies with ``fsdp=False``: the
+        constraint makes SPMD all-gather each layer's weights in their
+        stored dtype (bf16) *before* any CPU-backend f32 upcast — without
+        it, XLA converts-then-gathers, doubling both wire bytes and the
+        per-layer gathered-weight working set. The transpose constrains the
+        cotangent identically, keeping weight grads from materializing
+        fully replicated."""
+        if self.mesh is None:
+            return tree
+        return jax.tree.map(
+            lambda t, s: jax.lax.with_sharding_constraint(
+                t, NamedSharding(self.mesh, self.param_pspec(s, fsdp=fsdp))),
+            tree, spec_tree,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    # -------------------------------------------------------------- batch dims
+    def _dim_axes(self, dim: int, candidates: Sequence[str],
+                  used: set) -> Any:
+        """Largest prefix of ``candidates`` whose product divides ``dim``."""
+        picked = []
+        for a in candidates:
+            if a in used:
+                break
+            nxt = picked + [a]
+            size = int(np.prod([self.axis_size(x) for x in nxt]))
+            if dim % size != 0:
+                break
+            picked = nxt
+        if not picked:
+            return None
+        used.update(picked)
+        return tuple(picked) if len(picked) > 1 else picked[0]
+
+    def batch_pspec(self, shape: Tuple[int, ...]) -> P:
+        """(B, S, ...) activations / tokens: B over data axes; S over model
+        (sequence parallelism) when enabled and divisible."""
+        used: set = set()
+        b = self._dim_axes(shape[0], self.data_axes, used)
+        rest: list = [None] * (len(shape) - 1)
+        if len(shape) >= 2 and self.seq_shard:
+            s = self._dim_axes(shape[1], (self.model_axis,), used)
+            rest[0] = s
+        return P(b, *rest)
+
+    def batch_sharding(self, shape, dtype=jnp.int32) -> jax.ShapeDtypeStruct:
+        sh = (NamedSharding(self.mesh, self.batch_pspec(shape))
+              if self.mesh else None)
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+    # ------------------------------------------------------------ activations
+    def constrain_dims(self, x: jax.Array, dims) -> jax.Array:
+        """Megatron-SP style explicit layout: ``dims`` is one axis-group
+        candidate (axis name, tuple of names, or None) per tensor dim;
+        non-divisible dims fall back to replicated. Examples:
+          MLP intermediate (B,S,2,f): (data_axes, None, None, model)
+          q after projection (B,S,H,D): (data_axes, None, model, None)
+        """
+        if self.mesh is None:
+            return x
+        used: set = set()
+        out = []
+        for size, cand in zip(x.shape, dims):
+            if cand is None:
+                out.append(None)
+                continue
+            cands = cand if isinstance(cand, tuple) else (cand,)
+            out.append(self._dim_axes(size, cands, used))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*out)))
+
+    def gather_seq(self, x: jax.Array) -> jax.Array:
+        """Enter a TP region: batch stays on the data axes, sequence (and
+        everything else) gathered — the SP all-gather on layer entry."""
+        if self.mesh is None:
+            return x
+        return self.constrain_dims(x, (self.data_axes,)
+                                   + (None,) * (x.ndim - 1))
+
+    def shard_activations(self, h: jax.Array) -> jax.Array:
+        """Residual-stream constraint: (B, S, d) -> batch over data axes,
+        seq over model (SP). Non-divisible dims stay replicated."""
+        if self.mesh is None:
+            return h
+        return jax.lax.with_sharding_constraint(
+            h, NamedSharding(self.mesh, self.batch_pspec(h.shape)))
+
+    # ------------------------------------------------------------- cache spec
+    def cache_pspec(self, path: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+        """Decode-cache leaves. Layout conventions (models/api):
+        KV: (..., B, S, KV_heads, D); recurrent h: (..., B, W);
+        rwkv S: (..., B, H, N, N); shifts/conv keep B only.
+        Leading stacked ``layer`` dims are detected by path containing
+        'stack' or encdec stacked caches (k/v/ck/cv with ndim 5).
+        """
+        name = path[-1]
+        used: set = set()
+        n_lead = 0
+        if any(p == "stack" for p in path[:-1]):
+            n_lead = 1
+        elif name in ("k", "v", "ck", "cv") and len(shape) == 5:
+            n_lead = 1  # encdec stacked (nL, B, S, KV, D)
+        dims: list = [None] * len(shape)
+        bdim = n_lead
+        if name in ("k", "v", "ck", "cv"):
+            b, s, kv = shape[bdim], shape[bdim + 1], shape[bdim + 2]
+            dims[bdim] = self._dim_axes(b, self.data_axes, used)
+            if dims[bdim] is None or (
+                    isinstance(dims[bdim], str) and len(self.data_axes) > 1):
+                # long-context small-batch: spread the sequence dim instead
+                leftover = [a for a in self.data_axes if a not in used]
+                dims[bdim + 1] = self._dim_axes(s, leftover, used)
+            dims[bdim + 2] = self._dim_axes(kv, (self.model_axis,), used)
+            if dims[bdim + 2] is None and dims[bdim + 1] is None:
+                # few KV heads (MQA/whisper): spread sequence over model
+                dims[bdim + 1] = self._dim_axes(s, (self.model_axis,), used)
+        elif name == "h":                       # rg-lru state (..., B, W)
+            dims[bdim] = self._dim_axes(shape[bdim], self.data_axes, used)
+            dims[-1] = self._dim_axes(shape[-1], (self.model_axis,), used)
+        elif name == "conv":                    # (..., B, K-1, W)
+            dims[bdim] = self._dim_axes(shape[bdim], self.data_axes, used)
+            dims[-1] = self._dim_axes(shape[-1], (self.model_axis,), used)
+        elif name == "S":                       # rwkv (..., B, H, N, N)
+            dims[bdim] = self._dim_axes(shape[bdim], self.data_axes, used)
+            dims[bdim + 1] = self._dim_axes(shape[bdim + 1],
+                                            (self.model_axis,), used)
+        else:                                   # shifts: (..., B, d)
+            dims[bdim] = self._dim_axes(shape[bdim], self.data_axes, used)
+        while dims and dims[-1] is None:
+            dims.pop()
+        return P(*dims)
+
+    def cache_sharding(self, path, shape, dtype) -> jax.ShapeDtypeStruct:
+        sh = (NamedSharding(self.mesh, self.cache_pspec(path, shape))
+              if self.mesh else None)
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+    # ---------------------------------------------------------------- scalars
+    def replicated(self) -> Optional[NamedSharding]:
+        return NamedSharding(self.mesh, P()) if self.mesh else None
+
+
+def local_context() -> MeshContext:
+    """Single-device context (smoke tests): no mesh, no constraints."""
+    return MeshContext(mesh=None, data_axes=(), seq_shard=False)

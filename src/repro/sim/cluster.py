@@ -1,0 +1,282 @@
+"""Discrete-event cluster simulator for cache-policy evaluation.
+
+Models the paper's EC2 deployment (§IV): ``n_workers`` machines, each with a
+bounded RDD cache, a disk tier, a fixed number of task slots, and
+disk/memory/network bandwidths. Jobs are ``JobDAG``s; the scheduler is
+locality-aware and round-robins across tenants (FIFO within a job).
+
+Task duration = scheduling overhead + max-over-inputs(fetch time) + compute:
+the *max* is the paper's all-or-nothing bottleneck — one cold peer hides
+every warm one.
+
+The simulator drives the same ``CacheManager``/``DagState``/policy code that
+the real data pipeline uses; only time is simulated. Coordination messages
+are counted with the paper's protocol semantics (one broadcast per
+complete→incomplete flip of a peer group).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core import (Belady, CacheManager, CacheMetrics, DagState, JobDAG,
+                    MessageStats, TaskSpec, make_policy)
+
+
+@dataclass
+class HardwareModel:
+    """Per-worker hardware. Defaults calibrated to the paper's m4.large
+    fleet (2 vCPU / 8 GB, EBS magnetic, direct I/O): see
+    benchmarks/fig5_makespan.py for the calibration note."""
+
+    cache_bytes: int = 5_300 * 2 ** 20 // 10      # per-worker share, set by runner
+    disk_bw: float = 50e6                         # B/s  (direct I/O, no page cache)
+    mem_bw: float = 10e9                          # B/s
+    net_bw: float = 56e6                          # B/s  (m4.large "moderate")
+    slots: int = 2                                # task slots (2 vCPUs)
+    task_overhead: float = 0.08                   # s, Spark launch+sched delay
+    compute_bw: float = 200e6                     # B/s processed by task code
+    disk_queue: bool = False                      # True: serialize the volume;
+                                                  # False: parallel streams at
+                                                  # per-stream disk_bw (EBS-like)
+
+
+@dataclass
+class SimResult:
+    makespan: float
+    metrics: CacheMetrics
+    messages: MessageStats
+    per_job_finish: Dict[str, float] = field(default_factory=dict)
+    task_runtimes: Dict[str, float] = field(default_factory=dict)
+
+    def as_dict(self):
+        return {
+            "makespan": self.makespan,
+            **self.metrics.as_dict(),
+            "messages": self.messages.as_dict(),
+        }
+
+
+class ClusterSim:
+    def __init__(self, n_workers: int, hw: HardwareModel, policy: str = "lerc",
+                 policy_kwargs: Optional[dict] = None,
+                 cache_outputs: bool = True) -> None:
+        self.n_workers = n_workers
+        self.hw = hw
+        self.dag = JobDAG()
+        self.state = DagState(self.dag)
+        self.metrics = CacheMetrics()
+        self.messages = MessageStats()
+        self.cache_outputs = cache_outputs
+        self.policy_name = policy
+        self._policies = []
+        self.managers: List[CacheManager] = []
+        for w in range(n_workers):
+            pol = make_policy(policy, **(policy_kwargs or {}))
+            self._policies.append(pol)
+            self.managers.append(CacheManager(
+                capacity=hw.cache_bytes, policy=pol, state=self.state,
+                metrics=self.metrics, on_evict=self._on_evict))
+        self.home: Dict[str, int] = {}            # block -> worker
+        self._outputs_not_cached: set = set()
+        self._done: set = set()                   # executed tasks, across runs
+        # per-worker disk is a serialized resource (the m4.large EBS volume):
+        # concurrent readers queue behind each other
+        self._disk_free = [0.0] * n_workers
+
+    # ------------------------------------------------------------- protocol
+    def _on_evict(self, block: str, flipped_groups: List[str]) -> None:
+        """Paper §III-C accounting: an eviction out of ≥1 complete peer
+        group costs one report + one broadcast; evictions out of
+        already-incomplete groups are silent."""
+        if flipped_groups:
+            self.messages.eviction_reports += 1
+            self.messages.eviction_broadcasts += 1
+            self.messages.point_to_point += 1 + self.n_workers
+
+    # ------------------------------------------------------------ job intake
+    def submit(self, job: JobDAG, output_not_cached: Sequence[str] = ()) -> None:
+        for b in job.blocks.values():
+            if b.id not in self.dag.blocks:
+                self.dag.add_block(b)
+                self.home[b.id] = (b.preferred_worker
+                                   if b.preferred_worker is not None
+                                   else len(self.home) % self.n_workers)
+        for t in job.tasks.values():
+            self.dag.add_task(t)
+        self._outputs_not_cached.update(output_not_cached)
+        self.state.rebuild()
+        self.messages.peer_profile_broadcasts += 1
+        self.messages.point_to_point += self.n_workers
+
+    # ---------------------------------------------------------------- timing
+    def _disk_io(self, worker: int, nbytes: int, clock: float) -> float:
+        """Seconds until a disk transfer of ``nbytes`` started at ``clock``
+        completes, serializing behind in-flight transfers on that worker's
+        volume (direct I/O: no page cache, §IV)."""
+        if not self.hw.disk_queue:
+            return nbytes / self.hw.disk_bw
+        start = max(self._disk_free[worker], clock)
+        self._disk_free[worker] = start + nbytes / self.hw.disk_bw
+        return self._disk_free[worker] - clock
+
+    def _fetch_time(self, block: str, on_worker: int, clock: float
+                    ) -> Tuple[float, bool]:
+        """(seconds, was_cache_hit) to fetch a materialized block."""
+        size = self.dag.blocks[block].size
+        h = self.home[block]
+        mgr = self.managers[h]
+        if mgr.in_memory(block):
+            t = size / self.hw.mem_bw
+            if h != on_worker:
+                t += size / self.hw.net_bw
+            self.metrics.mem_bytes_read += size
+            return t, True
+        # on disk at its home worker
+        t = self._disk_io(h, size, clock)
+        if h != on_worker:
+            t += size / self.hw.net_bw
+        self.metrics.disk_bytes_read += size
+        return t, False
+
+    def _source_read_time(self, block: str, worker: int, clock: float) -> float:
+        """Initial materialization from stable storage (not a cache access)."""
+        return self._disk_io(worker, self.dag.blocks[block].size, clock)
+
+    # -------------------------------------------------------------- schedule
+    def _unmet(self, task: TaskSpec) -> int:
+        """Inputs not yet materialized. Raw source blocks (no producer) live
+        on stable storage and are always available."""
+        return sum(1 for b in task.inputs
+                   if b in self.dag.producer and b not in self.state.materialized)
+
+    def _pick_worker(self, task: TaskSpec, free_slots: List[int]) -> int:
+        """Locality: the eligible worker holding the most input bytes."""
+        eligible = [w for w in range(self.n_workers) if free_slots[w] > 0]
+        if not eligible:
+            raise RuntimeError("no free slot")
+
+        def local_bytes(w: int) -> int:
+            return sum(self.dag.blocks[b].size for b in task.inputs
+                       if self.home.get(b) == w)
+
+        return max(eligible, key=lambda w: (local_bytes(w), -w))
+
+    def run(self, belady_trace: Optional[List[str]] = None,
+            stages: Optional[set] = None) -> SimResult:
+        """Run all currently-runnable tasks to completion.
+
+        ``stages``: if given, only tasks whose ``stage`` is in the set are
+        executed this call — used to separate the (unmeasured) ingest phase
+        from the measured compute phase, as in the paper's §IV setup where
+        the input files are partitioned and stored before the zip jobs are
+        timed. The cache policy sees the *full* DAG throughout (reference
+        counts are known from job submission, as in Spark's lazy plan).
+        Each call measures its own makespan from t=0.
+        """
+        if belady_trace is not None:
+            for pol in self._policies:
+                if isinstance(pol, Belady):
+                    pol.set_trace(list(belady_trace))
+        clock = 0.0
+        self._disk_free = [0.0] * self.n_workers
+        free_slots = [self.hw.slots] * self.n_workers
+        done: set = self._done
+        events: List[Tuple[float, int, str, int]] = []   # (t, seq, task, worker)
+        seq = itertools.count()
+        per_job_finish: Dict[str, float] = {}
+        task_runtimes: Dict[str, float] = {}
+
+        def runnable(t: TaskSpec) -> bool:
+            return (t.id not in done
+                    and (stages is None or t.stage in stages))
+
+        # incremental readiness: unmet-producer counts per task
+        unmet: Dict[str, int] = {t.id: self._unmet(t)
+                                 for t in self.dag.tasks.values()
+                                 if runnable(t)}
+        ready_by_job: Dict[str, List[TaskSpec]] = {}
+        for t in sorted(self.dag.tasks.values(), key=lambda t: t.id):
+            if runnable(t) and unmet[t.id] == 0:
+                ready_by_job.setdefault(t.job, []).append(t)
+        # multi-tenant fairness: round-robin across jobs
+        job_order = sorted(self.dag.jobs)
+        rr = itertools.cycle(job_order)
+
+        def try_schedule() -> None:
+            while any(free_slots) and any(ready_by_job.values()):
+                job = next(rr)
+                if not ready_by_job.get(job):
+                    continue
+                task = ready_by_job[job].pop(0)
+                worker = self._pick_worker(task, free_slots)
+                free_slots[worker] -= 1
+                dur = self._task_duration(task, worker, clock)
+                task_runtimes[task.id] = dur
+                heapq.heappush(events, (clock + dur, next(seq), task.id, worker))
+
+        try_schedule()
+        while events:
+            clock, _, tid, worker = heapq.heappop(events)
+            task = self.dag.tasks[tid]
+            done.add(tid)
+            free_slots[worker] += 1
+            # materialize output at this worker
+            out = task.output
+            self.home.setdefault(out, worker)
+            if self.cache_outputs and out not in self._outputs_not_cached:
+                self.managers[self.home[out]].insert(
+                    out, self.dag.blocks[out].size)
+            else:
+                self.managers[self.home[out]].disk.put(
+                    out, self.dag.blocks[out].size)
+                self.state.on_materialized(out, into_cache=False)
+            per_job_finish[task.job] = clock
+            for cons in self.dag.consumers.get(out, []):
+                if cons not in unmet:
+                    continue
+                unmet[cons] -= 1
+                if unmet[cons] == 0:
+                    ready_by_job.setdefault(self.dag.tasks[cons].job, []) \
+                                .append(self.dag.tasks[cons])
+            try_schedule()
+
+        return SimResult(makespan=clock, metrics=self.metrics,
+                         messages=self.messages, per_job_finish=per_job_finish,
+                         task_runtimes=task_runtimes)
+
+    # ----------------------------------------------------------- task timing
+    def _task_duration(self, task: TaskSpec, worker: int, clock: float) -> float:
+        hw = self.hw
+        dur = hw.task_overhead + task.compute_cost
+        cacheable_inputs = [b for b in task.inputs if b in self.dag.producer]
+        if not cacheable_inputs:
+            # pure source/load task: reads external storage via the disk
+            dur += sum(self._source_read_time(b, worker, clock)
+                       for b in task.inputs)
+            dur += sum(self.dag.blocks[b].size
+                       for b in task.inputs) / hw.compute_bw
+            return dur
+        # Def. 1 effectiveness, judged before any access mutates state
+        all_cached = all(self.managers[self.home[b]].in_memory(b)
+                         for b in cacheable_inputs)
+        fetch = 0.0
+        for b in cacheable_inputs:
+            t, hit = self._fetch_time(b, worker, clock)
+            fetch = max(fetch, t)          # parallel fetch: slowest peer wins
+            self.metrics.record_access(hit=hit, effective=hit and all_cached)
+            self._policies[self.home[b]].on_access(b)
+            pol = self._policies[self.home[b]]
+            if isinstance(pol, Belady):
+                pol.advance(b)
+        dur += fetch
+        compute_bytes = sum(self.dag.blocks[b].size for b in task.inputs)
+        dur += compute_bytes / hw.compute_bw
+        # writing the output: cached outputs are lazily spilled (no cost
+        # here); uncached outputs are written through to disk
+        if task.output in self._outputs_not_cached or not self.cache_outputs:
+            dur += self._disk_io(worker, self.dag.blocks[task.output].size,
+                                 clock + dur)
+        return dur

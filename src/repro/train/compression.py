@@ -1,0 +1,65 @@
+"""Cross-pod gradient compression with error feedback.
+
+At 2+ pods the data-parallel gradient all-reduce crosses the (slow)
+inter-pod links. Int8 compression with error feedback (1-bit-Adam-family,
+Seide et al. 2014; Tang et al. arXiv:2102.02888) cuts those bytes 2x vs
+bf16 / 4x vs fp32 while error feedback keeps convergence: the residual of
+each quantization is carried and added to the next step's gradient, so the
+*time-averaged* transmitted gradient is unbiased.
+
+``compress_grads`` applies quantize→dequantize with a carried error buffer
+— the optimizer sees exactly what a compressed wire transfer would deliver
+(numerics are real). The byte saving enters the roofline's collective term
+analytically (EXPERIMENTS.md §Perf): XLA SPMD emits the all-reduce from
+shardings, so the wire format itself is not re-implemented here; the
+fidelity-relevant part (what the update sees) is.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_init(params) -> Any:
+    """Error-feedback residual buffers (fp32, one per parameter)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads, ef_state):
+    """Error-feedback int8 round trip.
+
+    g_corrected = g + e ;  wire = Q(g_corrected) ;  e' = g_corrected - wire
+    Returns (wire_grads, new_ef_state).
+    """
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _quantize_int8(gf)
+        wire = _dequantize(q, s)
+        return wire, gf - wire
+
+    pairs = jax.tree.map(one, grads, ef_state)
+    wire = jax.tree.map(lambda t: t[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return wire, new_ef
+
+
+def compression_ratio(dtype=jnp.float32) -> float:
+    """Wire-byte ratio vs the uncompressed gradient dtype."""
+    return jnp.dtype(dtype).itemsize / 1  # int8 = 1 byte

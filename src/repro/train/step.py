@@ -1,0 +1,142 @@
+"""Train-step builder: value_and_grad → (optional) microbatch accumulation
+→ (optional) cross-pod gradient compression → AdamW.
+
+The same builder serves three consumers:
+
+* smoke tests / examples  — mesh_ctx=local_context(), tiny configs;
+* the real trainer        — jit with in/out shardings from the rules;
+* the AOT dry-run         — ``abstract_train_state`` builds the
+  ShapeDtypeStruct tree (with shardings) that ``.lower()`` consumes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import abstract_params, init_params, loss_fn, model_spec
+from ..models.common import ModelConfig
+from ..sharding import MeshContext
+from .compression import compress_grads, ef_init
+from .optimizer import OptConfig, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = field(default_factory=OptConfig)
+    microbatches: int = 1           # gradient accumulation steps
+    compress_pod_grads: bool = False
+    unroll: int = 1                 # layer-scan unroll (roofline extraction)
+    mb_unroll: bool = False         # unroll the microbatch scan (roofline)
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+
+def make_train_state(cfg: ModelConfig, tc: TrainConfig,
+                     rng: Optional[jax.Array] = None) -> Dict[str, Any]:
+    rng = rng if rng is not None else jax.random.key(0)
+    params = init_params(rng, model_spec(cfg), dtype=cfg.dtype)
+    state = {"params": params, "opt": adamw_init(params, tc.opt)}
+    if tc.compress_pod_grads:
+        state["ef"] = ef_init(params)
+    return state
+
+
+def abstract_train_state(cfg: ModelConfig, tc: TrainConfig,
+                         mesh_ctx: MeshContext) -> Dict[str, Any]:
+    """ShapeDtypeStruct state tree with shardings attached (AOT dry-run)."""
+    spec = model_spec(cfg)
+    sharding_fn = (lambda path, s: mesh_ctx.param_sharding(s)) \
+        if mesh_ctx.mesh is not None else None
+    params = abstract_params(spec, dtype=cfg.dtype, sharding_fn=sharding_fn)
+    f32 = abstract_params(spec, dtype=jnp.float32, sharding_fn=sharding_fn)
+    mdt = jnp.dtype(tc.opt.moments_dtype)
+    mom = f32 if mdt == jnp.float32 else abstract_params(
+        spec, dtype=mdt, sharding_fn=sharding_fn)
+    state: Dict[str, Any] = {
+        "params": params,
+        "opt": {"m": mom, "v": mom,
+                "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                             sharding=mesh_ctx.replicated())},
+    }
+    if tc.compress_pod_grads:
+        state["ef"] = f32
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, tc: TrainConfig,
+                     mesh_ctx: Optional[MeshContext] = None):
+    """Returns ``train_step(state, batch) -> (state, metrics)`` (un-jitted;
+    callers jit with the shardings they want)."""
+
+    # Gradients (and the fp32 accumulation carry) must be pinned to the
+    # parameter shardings: without constraints XLA's propagation pass is
+    # free to all-gather a full fp32 copy of each layer's weights inside
+    # the optimizer (observed: +18 GiB/device on qwen1.5-110b).
+    spec_tree = model_spec(cfg)
+
+    def single_loss(params, mb):
+        # constrain at entry: the transpose pins the param COTANGENTS to
+        # the same sharded layout right at the scan boundary, so the
+        # scan-bwd grad accumulator is allocated sharded, not gathered
+        if mesh_ctx is not None and mesh_ctx.mesh is not None:
+            params = mesh_ctx.constrain_tree(params, spec_tree)
+        return loss_fn(cfg, params, mb, mesh_ctx=mesh_ctx, unroll=tc.unroll)
+
+    def constrain_like_params(tree):
+        if mesh_ctx is None or mesh_ctx.mesh is None:
+            return tree
+        return jax.tree.map(
+            lambda t, s: jax.lax.with_sharding_constraint(
+                t, mesh_ctx.param_sharding(s)),
+            tree, spec_tree)
+
+    def compute_grads(params, batch):
+        k = tc.microbatches
+        if k <= 1:
+            loss, grads = jax.value_and_grad(single_loss)(params, batch)
+            return loss, constrain_like_params(grads)
+        mbs = jax.tree.map(
+            lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+        def mb_step(acc, mb):
+            loss_acc, gacc = acc
+            l, g = jax.value_and_grad(single_loss)(params, mb)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gacc, g)
+            return (loss_acc + l, constrain_like_params(gacc)), None
+
+        zeros = constrain_like_params(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss_sum, gsum), _ = jax.lax.scan(mb_step, (jnp.zeros(()), zeros),
+                                           mbs,
+                                           unroll=k if tc.mb_unroll else 1)
+        return loss_sum / k, jax.tree.map(lambda g: g / k, gsum)
+
+    def train_step(state, batch):
+        loss, grads = compute_grads(state["params"], batch)
+        new_state = dict(state)
+        if tc.compress_pod_grads:
+            grads, new_state["ef"] = compress_grads(grads, state["ef"])
+        params, opt, stats = adamw_update(tc.opt, state["params"], grads,
+                                          state["opt"])
+        new_state["params"] = params
+        new_state["opt"] = opt
+        return new_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def state_shardings(abstract_state):
+    """Pull the sharding tree out of an abstract state (for jit)."""
+    return jax.tree.map(lambda s: s.sharding, abstract_state)

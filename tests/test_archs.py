@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests (assignment requirement): every assigned
+arch instantiates a reduced config of the same family and runs one forward
+/ train / decode step on CPU with shape + no-NaN assertions."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import (decode_step, forward, init_decode_cache,
+                          init_params, loss_fn, make_dummy_batch, model_spec,
+                          param_count)
+from repro.models import encdec as ED
+from repro.sharding import local_context
+from repro.train import TrainConfig, build_train_step, make_train_state
+
+ARCHS = configs.ARCH_IDS
+
+
+@pytest.fixture(scope="module")
+def smoke(request):
+    return None
+
+
+def _setup(arch):
+    cfg = configs.get(arch, smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg), dtype=cfg.dtype)
+    return cfg, params
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg, params = _setup(arch)
+    B, S = 2, 32
+    batch = make_dummy_batch(cfg, B, S)
+    logits = forward(cfg, params, batch)
+    S_out = S + (cfg.frontend_len if cfg.frontend == "patch_embed" else 0)
+    assert logits.shape == (B, S_out, cfg.vocab)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_decreases_nothing_nan(arch):
+    cfg, _ = _setup(arch)
+    tc = TrainConfig()
+    state = make_train_state(cfg, tc)
+    step = jax.jit(build_train_step(cfg, tc, local_context()))
+    batch = make_dummy_batch(cfg, 2, 32)
+    state, m = step(state, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    # params actually moved
+    state2, m2 = step(state, batch)
+    assert bool(jnp.isfinite(m2["loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_steps(arch):
+    cfg, params = _setup(arch)
+    B, S = 2, 16
+    if cfg.family == "encdec":
+        frames = jnp.zeros((B, cfg.frontend_len, cfg.d_model), cfg.dtype)
+        enc = ED.encode(cfg, params, frames)
+        cache = ED.encdec_prefill_cache(cfg, params, enc, B, S)
+    else:
+        cache = init_decode_cache(cfg, B, S)
+    toks = jnp.ones((B, 1), jnp.int32)
+    for pos in range(3):
+        logits, cache = decode_step(cfg, params, cache, toks, pos)
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen2_7b", "gemma2_27b", "rwkv6_3b",
+                                  "recurrentgemma_9b"])
+def test_decode_matches_forward(arch):
+    """Incremental decode must agree with the teacher-forced forward on
+    the same token sequence (KV-cache correctness end-to-end)."""
+    cfg, params = _setup(arch)
+    B, S = 1, 12
+    toks = jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+    logits_full = forward(cfg, params, {"tokens": toks}).astype(jnp.float32)
+    cache = init_decode_cache(cfg, B, S)
+    outs = []
+    for pos in range(S):
+        lg, cache = decode_step(cfg, params, cache, toks[:, pos:pos + 1],
+                                pos)
+        outs.append(lg[:, 0].astype(jnp.float32))
+    logits_inc = jnp.stack(outs, axis=1)
+    # bf16 params, fp32 softmax path: tolerance loose but meaningful
+    assert float(jnp.max(jnp.abs(logits_full - logits_inc))) < 0.15, arch
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers from the assignment table."""
+    want = {
+        "recurrentgemma_9b": (38, 4096, 16, 1, 12288, 256_000),
+        "qwen1_5_110b": (80, 8192, 64, 8, 49152, 152_064),
+        "codeqwen1_5_7b": (32, 4096, 32, 32, 13440, 92_416),
+        "gemma2_27b": (46, 4608, 32, 16, 36864, 256_000),
+        "qwen2_7b": (28, 3584, 28, 4, 18944, 152_064),
+        "paligemma_3b": (18, 2048, 8, 1, 16384, 257_216),
+        "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 1408, 163_840),
+        "llama4_maverick_400b_a17b": (48, 5120, 40, 8, 8192, 202_048),
+        "whisper_base": (6, 512, 8, 8, 2048, 51_865),
+        "rwkv6_3b": (32, 2560, 16, 16, 8960, 65_536),
+    }
+    for arch, (L, d, H, KV, ff, V) in want.items():
+        cfg = configs.get(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, H, KV, ff, V), arch
+    # MoE routing parameters
+    assert configs.get("moonshot_v1_16b_a3b").n_experts == 64
+    assert configs.get("moonshot_v1_16b_a3b").top_k == 6
+    assert configs.get("llama4_maverick_400b_a17b").n_experts == 128
+    assert configs.get("llama4_maverick_400b_a17b").top_k == 1
+
+
+def test_chunked_attention_equals_xla_at_model_level():
+    cfg = configs.get("gemma2_27b", smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=jnp.float32)
+    cfg32 = cfg.replace(dtype=jnp.float32)
+    toks = jax.random.randint(jax.random.key(2), (2, 32), 0, cfg.vocab)
+    lx = forward(cfg32.replace(attn_impl="xla"), params, {"tokens": toks})
+    lc = forward(cfg32.replace(attn_impl="chunked", attn_q_chunk=16,
+                               attn_kv_chunk=8), params, {"tokens": toks})
+    assert float(jnp.max(jnp.abs(lx - lc))) < 1e-3

@@ -1,0 +1,163 @@
+"""Unit tests for the LERC core, anchored on the paper's own examples."""
+import pytest
+
+from repro.core import (BlockMeta, CacheManager, DagState, JobDAG, TaskSpec,
+                        make_policy)
+
+
+def fig1_dag(with_e=True):
+    """Paper Fig. 1: Task 1 coalesces a,b -> x; Task 2 coalesces c,d -> y.
+    All blocks unit size. a, b, c in a 3-entry cache; d on disk; block e is
+    then inserted, forcing one eviction."""
+    dag = JobDAG()
+    for name in "abcd":
+        dag.add_source(name, 0, size=1)
+    if with_e:
+        dag.add_source("e", 0, size=1)
+    dag.add_block(BlockMeta(id="x", size=2, dataset="x", index=0))
+    dag.add_block(BlockMeta(id="y", size=2, dataset="y", index=0))
+    dag.add_task(TaskSpec(id="task1", inputs=("a[0]", "b[0]"), output="x", job="j"))
+    dag.add_task(TaskSpec(id="task2", inputs=("c[0]", "d[0]"), output="y", job="j"))
+    return dag
+
+
+def setup_fig1(policy_name, **kw):
+    dag = fig1_dag()
+    state = DagState(dag)
+    mgr = CacheManager(capacity=3, policy=make_policy(policy_name, **kw), state=state)
+    # a, b, c materialized into cache; d materialized straight to disk
+    for b in ("a[0]", "b[0]", "c[0]"):
+        mgr.insert(b, 1)
+    mgr.disk.put("d[0]", 1)
+    state.on_materialized("d[0]", into_cache=False)
+    return dag, state, mgr
+
+
+def test_fig1_reference_counts():
+    _, state, _ = setup_fig1("lerc")
+    # every source block has exactly one unmaterialized dependent
+    for b in ("a[0]", "b[0]", "c[0]", "d[0]"):
+        assert state.ref_count[b] == 1
+    # a,b effective (task1's materialized inputs all cached); c not (d on disk)
+    assert state.eff_ref_count["a[0]"] == 1
+    assert state.eff_ref_count["b[0]"] == 1
+    assert state.eff_ref_count["c[0]"] == 0
+    assert state.eff_ref_count["d[0]"] == 0
+
+
+def test_fig1_lerc_evicts_c():
+    """The paper's headline example: LERC is the only policy that always
+    makes the right call (evict c)."""
+    _, state, mgr = setup_fig1("lerc")
+    victims = mgr.insert("e[0]", 1)
+    assert victims == ["c[0]"], f"LERC must evict c, got {victims}"
+    assert mgr.in_memory("a[0]") and mgr.in_memory("b[0]")
+
+
+def test_fig1_lru_evicts_wrong_block():
+    """LRU evicts a (oldest) — caching c without d speeds up nothing."""
+    _, state, mgr = setup_fig1("lru")
+    victims = mgr.insert("e[0]", 1)
+    assert victims == ["a[0]"]  # wrong choice: breaks task1's peer group
+
+
+def test_fig1_lrc_is_ambiguous():
+    """LRC sees ref count 1 for a, b and c alike — with LRU tiebreak it
+    evicts a (wrong). The paper: wrong with probability 2/3 under random
+    ties."""
+    _, state, mgr = setup_fig1("lrc", tiebreak="lru")
+    victims = mgr.insert("e[0]", 1)
+    assert victims == ["a[0]"]
+
+
+def test_fig1_effective_hit_ratio_after_choices():
+    """Def. 1 arithmetic from §III-A: with a,b cached the effective hit
+    ratio over the 4 accesses is 50%; evicting a or b drives it to 0."""
+    _, state, mgr = setup_fig1("lerc")
+    mgr.insert("e[0]", 1)  # evicts c
+    mgr.access_task_inputs("task1")   # a, b : both hits, both effective
+    mgr.access_task_inputs("task2")   # c, d : both misses
+    m = mgr.metrics
+    assert m.accesses == 4
+    assert m.hits == 2
+    assert m.effective_hits == 2
+    assert m.effective_hit_ratio == pytest.approx(0.5)
+
+
+def test_sticky_policy_shared_block_weakness():
+    """§III-A: a block shared by two tasks, one of whose groups is broken,
+    must NOT be evicted first — sticky does, LERC does not."""
+    dag = JobDAG()
+    for name, size in (("s", 1), ("p", 1), ("q", 1)):
+        dag.add_source(name, 0, size=size)
+    from repro.core import BlockMeta
+    dag.add_block(BlockMeta("o1", 1, "o1", 0))
+    dag.add_block(BlockMeta("o2", 1, "o2", 0))
+    # task A reads (s, p): complete; task B reads (s, q): q on disk -> broken
+    dag.add_task(TaskSpec(id="tA", inputs=("s[0]", "p[0]"), output="o1", job="j"))
+    dag.add_task(TaskSpec(id="tB", inputs=("s[0]", "q[0]"), output="o2", job="j"))
+    state = DagState(dag)
+
+    def stage(policy):
+        st = DagState(dag)
+        mgr = CacheManager(capacity=3, policy=policy, state=st)
+        for b in ("s[0]", "p[0]", "q[0]"):
+            mgr.insert(b, 1)
+        mgr.evict("q[0]")  # q pushed out -> task B's group broken
+        return st, mgr
+
+    st, mgr = stage(make_policy("sticky"))
+    # sticky ranks s (member of broken group B) as a bottom-class victim
+    sticky_keys = {b: mgr.policy.eviction_key(b, st) for b in ("s[0]", "p[0]")}
+    assert sticky_keys["s[0]"] < sticky_keys["p[0]"]
+
+    st, mgr = stage(make_policy("lerc"))
+    # LERC: s still has effective ref count 1 (task A complete) == p's
+    assert st.eff_ref_count["s[0]"] == 1
+    assert st.eff_ref_count["p[0]"] == 1
+
+
+def test_eviction_and_reload_flips_effective_counts():
+    dag = fig1_dag()
+    state = DagState(dag)
+    mgr = CacheManager(capacity=4, policy=make_policy("lerc"), state=state)
+    for b in ("a[0]", "b[0]", "c[0]"):
+        mgr.insert(b, 1)
+    mgr.disk.put("d[0]", 1)
+    state.on_materialized("d[0]", into_cache=False)
+    # load d back into cache: task2's group becomes complete
+    mgr.load_from_disk("d[0]")
+    assert state.eff_ref_count["c[0]"] == 1
+    assert state.eff_ref_count["d[0]"] == 1
+    # evict b: task1's group breaks
+    mgr.evict("b[0]")
+    assert state.eff_ref_count["a[0]"] == 0
+    assert state.eff_ref_count["b[0]"] == 0
+
+
+def test_task_completion_decrements_counts():
+    _, state, mgr = setup_fig1("lerc")
+    mgr.access_task_inputs("task1")
+    mgr.insert("x", 2)  # task1's output materializes -> task done
+    assert state.ref_count["a[0]"] == 0
+    assert state.eff_ref_count["a[0]"] == 0
+    assert "task1" in state.done_tasks
+
+
+def test_incremental_matches_rebuild():
+    """The incremental counter maintenance must equal the from-scratch
+    oracle after a busy event sequence."""
+    _, state, mgr = setup_fig1("lerc")
+    mgr.load_from_disk("d[0]")     # evicts c (LERC); mem: a, b, d
+    mgr.evict("a[0]")              # mem: b, d
+    mgr.load_from_disk("c[0]")     # mem: three of {b, c, d}
+    mgr.access_task_inputs("task2")
+    mgr.insert("y", 2)             # task2's output -> task2 done
+    oracle = DagState(state.dag,
+                      materialized=set(state.materialized),
+                      cached=set(state.cached),
+                      done_tasks=set(state.done_tasks))
+    assert state.ref_count == oracle.ref_count
+    assert state.eff_ref_count == oracle.eff_ref_count
+    assert {t: state.missing[t] for t in state.dag.tasks} == \
+           {t: oracle.missing[t] for t in oracle.dag.tasks}

@@ -1,0 +1,194 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.kernels import flash_attention, rglru_scan, rwkv6_wkv
+from repro.kernels.ref import attention_ref, rglru_ref, rwkv6_ref
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_CASES = [
+    # (B, S, H, KV, D, causal, window, softcap, dtype, tol)
+    (1, 128, 2, 2, 64, True, None, None, jnp.float32, 2e-5),
+    (2, 256, 4, 1, 64, True, None, None, jnp.float32, 2e-5),   # MQA
+    (1, 256, 8, 2, 64, True, None, 50.0, jnp.float32, 2e-5),   # softcap
+    (1, 320, 4, 4, 64, True, 128, None, jnp.float32, 2e-5),    # window
+    (2, 192, 2, 2, 128, False, None, None, jnp.float32, 2e-5), # bidi
+    (1, 256, 4, 2, 64, True, None, None, jnp.bfloat16, 2e-2),  # bf16
+    (1, 100, 2, 1, 64, True, 32, 30.0, jnp.float32, 2e-5),     # ragged+all
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES,
+                         ids=[str(c[:5]) + f"c{c[5]}w{c[6]}s{c[7]}"
+                              for c in FLASH_CASES])
+def test_flash_attention_matches_oracle(case):
+    B, S, H, KV, D, causal, window, softcap, dtype, tol = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case[:5]) % 2**31), 3)
+    q = _rand(ks[0], (B, S, H, D), dtype)
+    k = _rand(ks[1], (B, S, KV, D), dtype)
+    v = _rand(ks[2], (B, S, KV, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=64, block_k=64)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=causal, window=window,
+                        softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(B=st.integers(1, 2), S=st.integers(16, 200),
+       H=st.sampled_from([1, 2, 4]), g=st.sampled_from([1, 2]),
+       D=st.sampled_from([32, 64]), causal=st.booleans())
+def test_flash_attention_hypothesis(B, S, H, g, D, causal):
+    KV = max(H // g, 1)
+    H = KV * g
+    ks = jax.random.split(jax.random.PRNGKey(S * 7 + H), 3)
+    q = _rand(ks[0], (B, S, H, D))
+    k = _rand(ks[1], (B, S, KV, D))
+    v = _rand(ks[2], (B, S, KV, D))
+    out = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+
+RGLRU_CASES = [(1, 64, 128, 16, 128), (2, 200, 256, 64, 128),
+               (1, 256, 512, 256, 256), (3, 33, 128, 32, 128)]
+
+
+@pytest.mark.parametrize("case", RGLRU_CASES)
+def test_rglru_matches_oracle(case):
+    B, T, W, bt, bw = case
+    ks = jax.random.split(jax.random.PRNGKey(T + W), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, W)))
+    b = jax.random.normal(ks[1], (B, T, W))
+    y, hl = rglru_scan(a, b, block_t=bt, block_w=bw)
+    yr, hr = rglru_ref(a, b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(hr),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(B=st.integers(1, 3), T=st.integers(4, 100),
+       W=st.sampled_from([128, 256]), bt=st.sampled_from([16, 64]))
+def test_rglru_hypothesis(B, T, W, bt):
+    ks = jax.random.split(jax.random.PRNGKey(B * 1000 + T), 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, T, W)))
+    b = jax.random.normal(ks[1], (B, T, W))
+    y, _ = rglru_scan(a, b, block_t=bt, block_w=128)
+    yr, _ = rglru_ref(a, b)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 WKV
+# ---------------------------------------------------------------------------
+
+RWKV_CASES = [(1, 64, 2, 32, 16), (2, 96, 4, 64, 32), (1, 50, 2, 16, 32),
+              (1, 128, 2, 128, 32)]
+
+
+@pytest.mark.parametrize("case", RWKV_CASES)
+def test_rwkv6_matches_oracle(case):
+    B, T, H, N, C = case
+    ks = jax.random.split(jax.random.PRNGKey(T + N), 5)
+    r = _rand(ks[0], (B, T, H, N), scale=0.5)
+    k = _rand(ks[1], (B, T, H, N), scale=0.5)
+    v = _rand(ks[2], (B, T, H, N), scale=0.5)
+    logw = jnp.clip(-jnp.exp(_rand(ks[3], (B, T, H, N), scale=0.5)),
+                    -5.0, -1e-6)
+    u = _rand(ks[4], (H, N), scale=0.5)
+    out = rwkv6_wkv(r, k, v, logw, u, chunk=C)
+    ref = rwkv6_ref(r, k, v, logw, u)
+    scale = float(jnp.max(jnp.abs(ref))) + 1e-6
+    assert float(jnp.max(jnp.abs(out - ref))) / scale < 1e-4
+
+
+def test_rwkv6_chunk_invariance():
+    """Different chunk sizes must give identical results (state handoff)."""
+    B, T, H, N = 1, 96, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r, k, v = (_rand(ks[i], (B, T, H, N), scale=0.5) for i in range(3))
+    logw = jnp.clip(-jnp.exp(_rand(ks[3], (B, T, H, N), scale=0.3)),
+                    -5.0, -1e-6)
+    u = _rand(ks[4], (H, N), scale=0.5)
+    o16 = rwkv6_wkv(r, k, v, logw, u, chunk=16)
+    o48 = rwkv6_wkv(r, k, v, logw, u, chunk=48)
+    np.testing.assert_allclose(np.asarray(o16), np.asarray(o48),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash-decoding (split-K decode attention)
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 128, 4, 2, 64, None, None),
+    (1, 200, 8, 1, 64, None, 50.0),      # MQA + softcap, ragged S
+    (3, 256, 4, 4, 64, 64, None),        # sliding window
+    (2, 96, 8, 2, 128, None, None),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_oracle(case):
+    from repro.kernels import decode_attention
+    B, S, H, KV, D, window, softcap = case
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = _rand(ks[0], (B, H, D))
+    k = _rand(ks[1], (B, S, KV, D))
+    v = _rand(ks[2], (B, S, KV, D))
+    valid = jnp.array([S - 7 * i for i in range(B)], jnp.int32)
+    out = decode_attention(q, k, v, valid, window=window, softcap=softcap,
+                           block_k=64)
+    for b in range(B):
+        vl = int(valid[b])
+        lo = max(0, vl - window) if window is not None else 0
+        ref = attention_ref(q[b:b + 1, None], k[b:b + 1, lo:vl],
+                            v[b:b + 1, lo:vl], causal=False,
+                            softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out[b]),
+                                   np.asarray(ref[0, 0]),
+                                   atol=3e-5, rtol=3e-5)
+
+
+def test_decode_attention_matches_model_decode_path():
+    """The kernel must agree with the model's XLA decode attention on the
+    same cache contents (integration-level oracle)."""
+    from repro.kernels import decode_attention
+    B, S, H, KV, D = 2, 64, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = _rand(ks[0], (B, 1, H, D))
+    kc = _rand(ks[1], (B, S, KV, D))
+    vc = _rand(ks[2], (B, S, KV, D))
+    valid = jnp.array([S, S - 9], jnp.int32)
+    out_kernel = decode_attention(q[:, 0], kc, vc, valid, block_k=32)
+    ref = []
+    for b in range(B):
+        vl = int(valid[b])
+        ref.append(attention_ref(q[b:b + 1], kc[b:b + 1, :vl],
+                                 vc[b:b + 1, :vl], causal=False)[0, 0])
+    np.testing.assert_allclose(np.asarray(out_kernel),
+                               np.asarray(jnp.stack(ref)),
+                               atol=3e-5, rtol=3e-5)

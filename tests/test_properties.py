@@ -1,0 +1,122 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (BlockMeta, CacheManager, DagState, JobDAG, TaskSpec,
+                        build_cluster, make_policy)
+
+
+# ---------------------------------------------------------------------------
+# Random DAG + event-sequence machinery
+# ---------------------------------------------------------------------------
+
+
+def random_dag(draw) -> JobDAG:
+    dag = JobDAG()
+    n_src = draw(st.integers(3, 8))
+    for i in range(n_src):
+        dag.add_source("s", i, size=draw(st.integers(1, 3)))
+    n_tasks = draw(st.integers(1, 6))
+    for t in range(n_tasks):
+        k = draw(st.integers(1, min(3, n_src)))
+        inputs = tuple(f"s[{i}]" for i in sorted(
+            draw(st.sets(st.integers(0, n_src - 1), min_size=k, max_size=k))))
+        out = f"o{t}"
+        dag.add_block(BlockMeta(out, 1, "o", t))
+        dag.add_task(TaskSpec(f"t{t}", inputs, out, job="j"))
+    return dag
+
+
+dag_strategy = st.builds(lambda d: d, st.just(None)).flatmap(
+    lambda _: st.composite(lambda draw: random_dag(draw))())
+
+event_strategy = st.lists(
+    st.tuples(st.sampled_from(["insert", "evict", "load", "task_done"]),
+              st.integers(0, 10)),
+    min_size=0, max_size=30)
+
+
+@settings(max_examples=200, deadline=None)
+@given(dag=st.composite(lambda draw: random_dag(draw))(),
+       events=event_strategy)
+def test_incremental_counts_match_oracle(dag, events):
+    """After ANY event sequence, incrementally-maintained ref counts and
+    effective ref counts equal a from-scratch rebuild (the paper's
+    Definitions computed directly)."""
+    state = DagState(dag)
+    mgr = CacheManager(capacity=4, policy=make_policy("lerc"), state=state)
+    blocks = sorted(dag.blocks)
+    tasks = sorted(dag.tasks)
+    for kind, idx in events:
+        if kind == "insert":
+            b = blocks[idx % len(blocks)]
+            if b not in mgr.mem and dag.blocks[b].size <= mgr.mem.capacity:
+                mgr.insert(b, dag.blocks[b].size)
+        elif kind == "evict":
+            if mgr.mem.blocks:
+                b = sorted(mgr.mem.blocks)[idx % len(mgr.mem.blocks)]
+                if b not in mgr.pinned:
+                    mgr.evict(b)
+        elif kind == "load":
+            spilled = sorted(set(mgr.disk.blocks) - set(mgr.mem.blocks))
+            if spilled:
+                mgr.load_from_disk(spilled[idx % len(spilled)])
+        elif kind == "task_done":
+            t = tasks[idx % len(tasks)]
+            state.on_task_done(t)
+
+    oracle = DagState(dag, materialized=set(state.materialized),
+                      cached=set(state.cached),
+                      done_tasks=set(state.done_tasks))
+    assert state.ref_count == oracle.ref_count
+    assert state.eff_ref_count == oracle.eff_ref_count
+
+
+@settings(max_examples=100, deadline=None)
+@given(dag=st.composite(lambda draw: random_dag(draw))())
+def test_effective_refs_bounded_by_refs(dag):
+    state = DagState(dag)
+    mgr = CacheManager(capacity=3, policy=make_policy("lerc"), state=state)
+    for b in sorted(dag.blocks)[:5]:
+        if dag.blocks[b].size <= 3:
+            mgr.insert(b, dag.blocks[b].size)
+    for b in dag.blocks:
+        assert 0 <= state.eff_ref_count.get(b, 0) <= state.ref_count.get(b, 0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(dag=st.composite(lambda draw: random_dag(draw))(),
+       events=event_strategy)
+def test_coordination_replicas_match_oracle(dag, events):
+    """Worker replicas driven only by bus messages must agree with a
+    centrally-maintained oracle, and a peer group triggers at most ONE
+    eviction broadcast per complete->incomplete transition (§III-C)."""
+    master, workers, bus = build_cluster(n_workers=3)
+    master.submit_job(dag)
+    oracle = DagState(dag)
+    blocks = sorted(dag.blocks)
+    in_mem = set()
+
+    transitions = 0          # complete -> incomplete flips (ground truth)
+    for kind, idx in events:
+        b = blocks[idx % len(blocks)]
+        if kind in ("insert", "load"):
+            if b not in in_mem:
+                in_mem.add(b)
+                oracle.on_materialized(b, into_cache=True)
+                master.status_update("materialized", b)
+        elif kind == "evict":
+            if b in in_mem:
+                in_mem.discard(b)
+                flipped = oracle.on_evicted(b)
+                if flipped:
+                    transitions += 1
+                workers[0].local_eviction(b)
+
+    w = workers[1].state
+    assert w.ref_count == oracle.ref_count
+    assert w.eff_ref_count == oracle.eff_ref_count
+    # protocol overhead: exactly one report+broadcast per flip
+    assert bus.stats.eviction_reports == transitions
+    assert bus.stats.eviction_broadcasts == transitions

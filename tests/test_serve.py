@@ -1,0 +1,121 @@
+"""Prefix store (LERC on KV chains) and serve-engine integration tests."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import init_params, model_spec
+from repro.serve import PrefixStore, ServeEngine
+
+
+def _payload():
+    return {"kv": np.zeros(4, np.float32)}
+
+
+def test_chain_all_or_nothing():
+    """A resident block below a non-resident ancestor yields no effective
+    hit (the paper's property, chain form)."""
+    st = PrefixStore(capacity_bytes=1 << 20, policy="lerc", block_tokens=4)
+    toks = list(range(12))                      # 3 blocks
+    st.insert(toks, [_payload()] * 3, nbytes_per_block=100)
+    chain = st._walk(toks)
+    st._evict(chain[0])                         # break the root block
+    usable = st.lookup(toks)
+    assert usable == []                         # nothing usable
+    m = st.metrics()
+    assert m["hit_ratio"] > 0                   # blocks 2,3 are plain hits
+    assert m["effective_hit_ratio"] == 0        # ...but effective = 0
+
+
+def test_lerc_keeps_requested_chain_under_pressure():
+    """Cache full of a requested (hot) chain + an unreferenced (cold) one;
+    a new insert forces one eviction. LERC sacrifices the cold chain (zero
+    effective references); LRU evicts by recency and breaks the hot one."""
+    def build(policy):
+        st = PrefixStore(capacity_bytes=400, policy=policy, block_tokens=4)
+        hot = list(range(8))                    # 2 blocks, queued requests
+        cold = list(range(100, 108))            # 2 blocks, no requests
+        st.insert(hot, [_payload()] * 2, nbytes_per_block=100)
+        for _ in range(3):
+            st.register_request(hot + [1, 2, 3, 4])
+        st.insert(cold, [_payload()] * 2, nbytes_per_block=100)
+        # cold touched last -> under LRU the hot chain is the LRU victim
+        st.insert(list(range(200, 204)), [_payload()],
+                  nbytes_per_block=100)         # forces one eviction
+        return st, hot
+
+    st, hot = build("lerc")
+    assert len(st.lookup(hot)) == 2, "LERC must keep the requested chain"
+    st, hot = build("lru")
+    assert len(st.lookup(hot)) < 2, "LRU breaks the hot chain (recency)"
+
+
+def test_lru_vs_lerc_effective_ratio():
+    rng = np.random.default_rng(0)
+    families = [list(rng.integers(0, 1000, 16)) for _ in range(4)]
+    out = {}
+    for policy in ("lru", "lrc", "lerc"):
+        st = PrefixStore(capacity_bytes=900, policy=policy, block_tokens=4)
+        # register a queue that reuses family prefixes
+        rids = []
+        reqs = []
+        for i in range(12):
+            fam = families[i % 4]
+            req = fam + list(rng.integers(0, 1000, 4))
+            reqs.append(req)
+            rids.append(st.register_request(req))
+        for rid, req in zip(rids, reqs):
+            st.lookup(req)
+            st.insert(req, [_payload()] * (len(req) // 4),
+                      nbytes_per_block=60)
+            st.complete_request(rid)
+        out[policy] = st.metrics()["effective_hit_ratio"]
+    assert out["lerc"] >= out["lru"]
+
+
+def test_engine_prefix_reuse_and_determinism():
+    cfg = configs.get("qwen2_7b", smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=cfg.dtype)
+    rng = np.random.default_rng(0)
+    shared = list(rng.integers(0, cfg.vocab, 24))
+
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                      store=PrefixStore(1 << 20, "lerc", block_tokens=8))
+    r1 = eng.submit(shared + [1, 2, 3], max_new=4)
+    eng.run()
+    r2 = eng.submit(shared + [4, 5, 6], max_new=4)
+    eng.run()
+    assert r1.prefill_skipped == 0
+    assert r2.prefill_skipped >= 16             # shared prefix reused
+    m = eng.metrics()
+    assert m["prefill_saved_frac"] > 0
+
+    # identical prompt must generate identical tokens (cold vs warm)
+    e2 = ServeEngine(cfg, params, max_slots=1, max_seq=64)
+    a = e2.submit(shared[:16], max_new=5)
+    e2.run()
+    b = e2.submit(shared[:16], max_new=5)
+    e2.run()
+    assert a.generated == b.generated
+
+
+def test_engine_continuous_batching_isolation():
+    """Interleaved requests in different slots must not contaminate each
+    other: same prompt alone vs alongside another request."""
+    cfg = configs.get("qwen2_7b", smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=cfg.dtype)
+    rng = np.random.default_rng(1)
+    p1 = list(rng.integers(0, cfg.vocab, 10))
+    p2 = list(rng.integers(0, cfg.vocab, 7))
+
+    solo = ServeEngine(cfg, params, max_slots=1, max_seq=64)
+    rs = solo.submit(p1, max_new=4)
+    solo.run()
+
+    duo = ServeEngine(cfg, params, max_slots=2, max_seq=64)
+    ra = duo.submit(p1, max_new=4)
+    rb = duo.submit(p2, max_new=4)
+    duo.run()
+    assert ra.generated == rs.generated

@@ -1,0 +1,105 @@
+"""Sharding-rule unit tests (no devices needed: pure PartitionSpec logic
+over a stub mesh)."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ParamSpec
+from repro.sharding import MeshContext
+
+
+class _StubMesh:
+    """Quacks like jax.sharding.Mesh for axis-size queries."""
+
+    def __init__(self, shape):
+        self.shape = shape
+        self.size = 1
+        for v in shape.values():
+            self.size *= v
+
+
+def ctx(multi_pod=False, **kw):
+    shape = ({"pod": 2, "data": 16, "model": 16} if multi_pod
+             else {"data": 16, "model": 16})
+    data_axes = ("pod", "data") if multi_pod else ("data",)
+    return MeshContext(mesh=_StubMesh(shape), data_axes=data_axes, **kw)
+
+
+def test_tp_and_fsdp_assignment():
+    c = ctx()
+    wq = ParamSpec((8192, 64, 128), ("embed", "heads", "head_dim"))
+    assert c.param_pspec(wq) == P("data", "model")
+    wi = ParamSpec((8192, 2, 49152), ("embed", None, "ff"))
+    assert c.param_pspec(wi) == P("data", None, "model")
+    tok = ParamSpec((152064, 8192), ("vocab", "embed"))
+    assert c.param_pspec(tok) == P("model", "data")
+
+
+def test_gathered_layout_drops_fsdp():
+    c = ctx()
+    wi = ParamSpec((8192, 2, 49152), ("embed", None, "ff"))
+    assert c.param_pspec(wi, fsdp=False) == P(None, None, "model")
+
+
+def test_divisibility_fallback():
+    c = ctx()
+    # kv_heads = 8 does not divide model=16 -> replicated
+    wk = ParamSpec((8192, 8, 128), ("embed", "kv_heads", "head_dim"))
+    assert c.param_pspec(wk) == P("data")
+    # odd embed dim -> no fsdp either
+    odd = ParamSpec((4097, 8, 128), ("embed", "kv_heads", "head_dim"))
+    assert c.param_pspec(odd) == P()
+
+
+def test_axis_used_once_per_tensor():
+    c = ctx()
+    # experts and ff both want "model": experts (first) wins
+    wi = ParamSpec((64, 2048, 2, 1408), ("experts", "embed", None, "ff"))
+    spec = c.param_pspec(wi)
+    assert spec == P("model", "data")
+    flat = [a for a in spec if a is not None]
+    assert len(flat) == len(set(flat))
+
+
+def test_multi_pod_fsdp_spans_pod_and_data():
+    c = ctx(multi_pod=True)
+    wi = ParamSpec((8192, 2, 49152), ("embed", None, "ff"))
+    assert c.param_pspec(wi) == P(("pod", "data"), None, "model")
+    assert c.dp_size == 32
+
+
+def test_stacked_layer_axis_stays_replicated():
+    c = ctx()
+    stacked = ParamSpec((80, 8192, 2, 49152),
+                        ("layer", "embed", None, "ff"))
+    assert c.param_pspec(stacked) == P(None, "data", None, "model")
+
+
+def test_batch_pspec_sp():
+    c = ctx()
+    assert c.batch_pspec((256, 4096)) == P("data", "model")
+    # batch of 1: nothing shardable on dim 0
+    assert c.batch_pspec((1, 4096)) == P(None, "model")
+    c2 = ctx()
+    c2.seq_shard = False
+    assert c2.batch_pspec((256, 4096)) == P("data", None)
+
+
+def test_cache_pspec_kv_and_fallbacks():
+    c = ctx()
+    # stacked KV: (layer, B, S, KV, D) -> B over data, KV over model
+    p = c.cache_pspec(("stack", "0_G", "k"), (28, 128, 32768, 16, 128))
+    assert p == P(None, "data", None, "model")
+    # MQA (KV=1) + batch 1 (long context): S spread over data AND model
+    p = c.cache_pspec(("stack", "1_G", "k"), (23, 1, 524288, 16, 128))
+    assert p == P(None, None, "data", "model")
+    # whisper: KV=8 not divisible -> S over model
+    p = c.cache_pspec(("k",), (6, 128, 32768, 8, 64))
+    assert p == P(None, "data", "model")
+
+
+def test_cache_pspec_recurrent_states():
+    c = ctx()
+    p = c.cache_pspec(("stack", "0_R", "h"), (12, 128, 4096))
+    assert p == P(None, "data", "model")
+    p = c.cache_pspec(("stack", "0_W", "S"), (32, 128, 16, 160, 160))
+    assert p == P(None, "data", "model")
