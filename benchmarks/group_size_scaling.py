@@ -14,6 +14,8 @@ EXPERIMENTS.md.
 """
 from __future__ import annotations
 
+import time
+
 from repro.sim import ClusterSim, HardwareModel, coalesce_job
 
 from .common import N_WORKERS, PAPER_HW, print_table, save_results
@@ -33,13 +35,16 @@ def run(policy: str, group_size: int, cache_frac: float = 0.5):
         dag, _ = coalesce_job(f"j{t}", n_groups // 3, group_size,
                               BLOCK_MB * 2 ** 20, n_workers=N_WORKERS)
         sim.submit(dag)
+    t0 = time.perf_counter()
     sim.run(stages={0})
     res = sim.run(stages={1})
+    wall = time.perf_counter() - t0
     return {
         "policy": policy, "group_size": group_size,
         "makespan_s": round(res.makespan, 2),
         "hit_ratio": round(res.metrics.hit_ratio, 3),
         "effective_hit_ratio": round(res.metrics.effective_hit_ratio, 3),
+        "sim_wall_s": round(wall, 2),
     }
 
 
@@ -50,7 +55,7 @@ def main() -> None:
             rows.append(run(p, k))
     print_table("Peer-group size scaling (coalesce-k)", rows,
                 ["policy", "group_size", "makespan_s", "hit_ratio",
-                 "effective_hit_ratio"])
+                 "effective_hit_ratio", "sim_wall_s"])
     save_results("group_size_scaling", rows)
     print()
     for k in (2, 4, 8):

@@ -1,8 +1,14 @@
 """Extended policy frontier (beyond the paper's three): all 8 policies +
 the Belady clairvoyant bound on the paper's §IV workload, at the paper's
 cache sweep. Shows where LERC sits between practical policies and OPT.
+
+``sim_wall_s`` is the simulator's own wall-clock — dominated by victim
+selection, i.e. the eviction substrate (now EvictionIndex heap pops
+instead of a full sort per eviction batch).
 """
 from __future__ import annotations
+
+import time
 
 from repro.sim import ClusterSim, HardwareModel, multi_tenant_zip, \
     zip_access_trace
@@ -19,16 +25,19 @@ def run(policy: str, cache_gb: float, n_jobs=6, n_blocks=60):
     for dag, _ in multi_tenant_zip(n_jobs=n_jobs, n_blocks=n_blocks,
                                    n_workers=N_WORKERS):
         sim.submit(dag)
+    t0 = time.perf_counter()
     sim.run(stages={0})
     res = sim.run(stages={1},
                   belady_trace=zip_access_trace(n_jobs, n_blocks)
                   if policy == "belady" else None)
+    wall = time.perf_counter() - t0
     return {
         "policy": policy,
         "cache_gb": cache_gb,
         "makespan_s": round(res.makespan, 2),
         "hit_ratio": round(res.metrics.hit_ratio, 3),
         "effective_hit_ratio": round(res.metrics.effective_hit_ratio, 3),
+        "sim_wall_s": round(wall, 2),
     }
 
 
@@ -39,7 +48,7 @@ def main() -> None:
             rows.append(run(p, gb))
     print_table("Policy frontier (8 policies + Belady bound)", rows,
                 ["policy", "cache_gb", "makespan_s", "hit_ratio",
-                 "effective_hit_ratio"])
+                 "effective_hit_ratio", "sim_wall_s"])
     save_results("policy_frontier", rows)
     for gb in (2.4, 3.6):
         sub = {r["policy"]: r["makespan_s"] for r in rows

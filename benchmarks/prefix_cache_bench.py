@@ -4,6 +4,10 @@ Zipf-shared prefix workload against the REAL engine (smoke model): N
 request families with shared prefixes, constrained KV budget. Reports,
 per eviction policy, the effective chain hit ratio and the fraction of
 prefill tokens actually skipped — the serving analogue of paper Fig. 7.
+
+Since the serve path now runs on the shared core substrate, every
+``core`` policy is available here via ``make_policy`` — the sweep
+includes LFU and the paper's Sticky strawman alongside the seed trio.
 """
 from __future__ import annotations
 
@@ -11,7 +15,7 @@ import numpy as np
 
 from .common import print_table, save_results
 
-POLICIES = ["lru", "lrc", "lerc"]
+POLICIES = ["lru", "lfu", "lrc", "sticky", "lerc"]
 
 
 def run_policy(policy: str, *, n_requests: int = 24, n_families: int = 6,

@@ -28,6 +28,7 @@ def main(argv=None) -> None:
     }
     for mod, key in (("policy_frontier", "policy_frontier"),
                      ("group_size_scaling", "group_size"),
+                     ("eviction_scaling", "eviction_scaling"),
                      ("prefix_cache_bench", "prefix_cache"),
                      ("pipeline_bench", "pipeline"),
                      ("roofline", "roofline")):

@@ -2,6 +2,7 @@
 management (LERC) with effective-cache-hit-ratio accounting."""
 from .dag import BlockId, BlockMeta, DagState, JobDAG, TaskId, TaskSpec, fresh_id
 from .block_store import CacheManager, DiskTier, MemoryTier
+from .eviction_index import EvictionIndex
 from .coordination import (MessageBus, PeerTracker, PeerTrackerMaster,
                            build_cluster)
 from .metrics import CacheMetrics, MessageStats
@@ -10,7 +11,8 @@ from .policies import (LERC, LFU, LRC, LRU, MRU, FIFO, Belady, Policy,
 
 __all__ = [
     "BlockId", "BlockMeta", "DagState", "JobDAG", "TaskId", "TaskSpec",
-    "fresh_id", "CacheManager", "DiskTier", "MemoryTier", "MessageBus",
+    "fresh_id", "CacheManager", "DiskTier", "MemoryTier", "EvictionIndex",
+    "MessageBus",
     "PeerTracker", "PeerTrackerMaster", "build_cluster", "CacheMetrics",
     "MessageStats", "LERC", "LFU", "LRC", "LRU", "MRU", "FIFO", "Belady",
     "Policy", "Sticky", "POLICIES", "make_policy",

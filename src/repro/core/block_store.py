@@ -12,6 +12,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 from .dag import BlockId, DagState, JobDAG, TaskId
+from .eviction_index import EvictionIndex
 from .metrics import CacheMetrics
 from .policies import Policy
 
@@ -74,6 +75,9 @@ class CacheManager:
         self.disk = DiskTier()
         self.policy = policy
         self.state = state
+        # incremental victim queue over this cache's in-memory blocks;
+        # key invalidations flow in from the policy and the DagState
+        self.index = EvictionIndex(policy, state)
         self.metrics = metrics or CacheMetrics()
         self.on_evict = on_evict
         self.on_load = on_load
@@ -99,7 +103,8 @@ class CacheManager:
             return []
         victims = self.policy.choose_victims(
             list(self.mem.blocks), needed - self.mem.free,
-            self.mem.blocks, self.state, pinned=self.pinned)
+            self.mem.blocks, self.state, pinned=self.pinned,
+            index=self.index)
         for v in victims:
             self.evict(v)
         return victims
@@ -107,6 +112,7 @@ class CacheManager:
     def evict(self, block: BlockId) -> None:
         size = self.mem.drop(block)
         self.disk.put(block, size)
+        self.index.discard(block)
         self.policy.on_remove(block)
         flipped_groups = self.state.on_evicted(block)
         self.metrics.evictions += 1
@@ -136,6 +142,8 @@ class CacheManager:
             self.state.on_materialized(block, into_cache=True)
         else:
             self.state.on_loaded(block)
+        # index last: the key is computed against fully-updated counters
+        self.index.add(block)
         return victims
 
     def load_from_disk(self, block: BlockId) -> List[BlockId]:

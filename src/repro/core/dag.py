@@ -107,6 +107,35 @@ class JobDAG:
         self.jobs.setdefault(task.job, []).append(task.id)
         return task
 
+    def remove_task(self, tid: TaskId, remove_output: bool = False) -> TaskSpec:
+        """Retire a task from the DAG (serve: a request chain's reference
+        left the system). The caller is responsible for having settled the
+        task's counter contributions first (``DagState.on_task_removed``)."""
+        task = self.tasks.pop(tid)
+        for b in task.inputs:
+            consumers = self.consumers.get(b)
+            if consumers is not None and tid in consumers:
+                consumers.remove(tid)
+        self.producer.pop(task.output, None)
+        job_tasks = self.jobs.get(task.job)
+        if job_tasks is not None:
+            if tid in job_tasks:
+                job_tasks.remove(tid)
+            if not job_tasks:
+                del self.jobs[task.job]
+        if remove_output:
+            self.remove_block(task.output)
+        return task
+
+    def remove_block(self, block: BlockId) -> None:
+        """Drop a block with no remaining producer or consumers."""
+        if self.consumers.get(block):
+            raise ValueError(f"block {block} still has consumers")
+        if block in self.producer:
+            raise ValueError(f"block {block} still has a producer")
+        self.blocks.pop(block, None)
+        self.consumers.pop(block, None)
+
     # ------------------------------------------------------------------ query
     def source_blocks(self) -> List[BlockId]:
         return [b for b in self.blocks if b not in self.producer]
@@ -162,9 +191,20 @@ class DagState:
     eff_ref_count: Dict[BlockId, int] = field(default_factory=dict)
     missing: Dict[TaskId, int] = field(default_factory=dict)
     done_tasks: set = field(default_factory=set)
+    # eviction-key listeners (EvictionIndex instances): called with the
+    # blocks whose ref/eff counters just changed, or None for "everything"
+    key_listeners: List = field(default_factory=list, repr=False)
 
     def __post_init__(self) -> None:
         self.rebuild()
+
+    # ------------------------------------------------------------- listeners
+    def add_key_listener(self, fn) -> None:
+        self.key_listeners.append(fn)
+
+    def _notify(self, blocks: Optional[Iterable[BlockId]]) -> None:
+        for fn in self.key_listeners:
+            fn(blocks)
 
     # ---------------------------------------------------------------- derive
     def task_live(self, tid: TaskId) -> bool:
@@ -194,12 +234,15 @@ class DagState:
                 self.ref_count[b] += 1
                 if effective:
                     self.eff_ref_count[b] += 1
+        self._notify(None)
 
     # ---------------------------------------------------------------- events
     def _set_group_effective(self, tid: TaskId, effective: bool) -> None:
         delta = 1 if effective else -1
-        for b in self.dag.tasks[tid].inputs:
+        inputs = self.dag.tasks[tid].inputs
+        for b in inputs:
             self.eff_ref_count[b] += delta
+        self._notify(inputs)
 
     def on_materialized(self, block: BlockId, into_cache: bool = True) -> None:
         """A block was computed (or re-computed). New materialized blocks
@@ -269,10 +312,36 @@ class DagState:
             return
         effective = self.group_complete(tid)
         self.done_tasks.add(tid)
-        for b in self.dag.tasks[tid].inputs:
+        inputs = self.dag.tasks[tid].inputs
+        for b in inputs:
             self.ref_count[b] -= 1
             if effective:
                 self.eff_ref_count[b] -= 1
+        self._notify(inputs)
+
+    def on_task_added(self, tid: TaskId) -> None:
+        """Incremental counterpart of ``rebuild`` for one new task: charge
+        its references (serve: a request chain arrived). O(group size)."""
+        t = self.dag.tasks[tid]
+        self.missing[tid] = sum(
+            1 for b in t.inputs
+            if b in self.materialized and b not in self.cached)
+        effective = self.missing[tid] == 0
+        for b in t.inputs:
+            self.ref_count[b] = self.ref_count.get(b, 0) + 1
+            if effective:
+                self.eff_ref_count[b] = self.eff_ref_count.get(b, 0) + 1
+            else:
+                self.eff_ref_count.setdefault(b, 0)
+        self._notify(t.inputs)
+
+    def on_task_removed(self, tid: TaskId) -> None:
+        """Retire a task entirely (serve: request finished or cancelled):
+        settle its counter contributions and forget its bookkeeping. The
+        caller may then drop it from the DAG (``JobDAG.remove_task``)."""
+        self.on_task_done(tid)
+        self.done_tasks.discard(tid)
+        self.missing.pop(tid, None)
 
     def on_removed(self, block: BlockId) -> None:
         """Block deleted entirely (unpersisted): treated as eviction."""

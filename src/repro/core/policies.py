@@ -15,7 +15,8 @@ from __future__ import annotations
 
 import random
 from abc import ABC, abstractmethod
-from typing import Dict, Iterable, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, Iterable, List, Optional, Tuple
 
 from .dag import BlockId, DagState
 
@@ -30,6 +31,16 @@ class Policy(ABC):
         self._last_access: Dict[BlockId, int] = {}
         self._freq: Dict[BlockId, int] = {}
         self._inserted_at: Dict[BlockId, int] = {}
+        self._indexes: List = []      # EvictionIndexes fed by this policy
+
+    # ----------------------------------------------------------------- index
+    def attach_index(self, index) -> None:
+        self._indexes.append(index)
+
+    def _touch(self, block: BlockId) -> None:
+        """This policy's own key inputs for ``block`` changed."""
+        for index in self._indexes:
+            index.invalidate(block)
 
     # ------------------------------------------------------------- lifecycle
     def on_insert(self, block: BlockId) -> None:
@@ -37,11 +48,13 @@ class Policy(ABC):
         self._inserted_at[block] = self._clock
         self._last_access[block] = self._clock
         self._freq[block] = self._freq.get(block, 0)
+        self._touch(block)
 
     def on_access(self, block: BlockId) -> None:
         self._clock += 1
         self._last_access[block] = self._clock
         self._freq[block] = self._freq.get(block, 0) + 1
+        self._touch(block)
 
     def on_remove(self, block: BlockId) -> None:
         self._inserted_at.pop(block, None)
@@ -53,7 +66,16 @@ class Policy(ABC):
 
     def choose_victims(self, candidates: Iterable[BlockId], needed: int,
                        sizes: Dict[BlockId, int], state: DagState,
-                       pinned: Optional[set] = None) -> List[BlockId]:
+                       pinned: Optional[set] = None,
+                       index=None) -> List[BlockId]:
+        """Victims covering ``needed`` bytes, best-first.
+
+        With an ``EvictionIndex`` this is O(victims · log n); the sorted
+        full scan remains as the index-less fallback (and as the oracle the
+        property tests compare against).
+        """
+        if index is not None:
+            return index.choose_victims(needed, sizes, pinned)
         pinned = pinned or set()
         ranked = sorted((b for b in candidates if b not in pinned),
                         key=lambda b: self.eviction_key(b, state))
@@ -162,21 +184,25 @@ class Belady(Policy):
 
     def __init__(self) -> None:
         super().__init__()
-        self._future: Dict[BlockId, List[int]] = {}
+        self._future: Dict[BlockId, Deque[int]] = {}
         self._cursor = 0
 
     def set_trace(self, trace: List[BlockId]) -> None:
+        stale = set(self._future)        # keys from any previous trace
         self._future = {}
         for i, b in enumerate(trace):
-            self._future.setdefault(b, []).append(i)
+            self._future.setdefault(b, deque()).append(i)
         self._cursor = 0
+        for b in stale | set(self._future):
+            self._touch(b)
 
     def advance(self, block: BlockId) -> None:
         """Consume one access of ``block`` from the trace."""
         self._cursor += 1
         accesses = self._future.get(block)
         if accesses:
-            accesses.pop(0)
+            accesses.popleft()
+            self._touch(block)
 
     def eviction_key(self, block: BlockId, state: DagState):
         accesses = self._future.get(block, [])

@@ -13,6 +13,7 @@ import jax
 import numpy as np
 
 from .. import configs
+from ..core import POLICIES
 from ..models import init_params, model_spec
 from ..serve import PrefixStore, ServeEngine
 
@@ -24,8 +25,9 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    # belady needs a future-access trace the serve path cannot provide
     ap.add_argument("--policy", default="lerc",
-                    choices=["lru", "lrc", "lerc"])
+                    choices=sorted(p for p in POLICIES if p != "belady"))
     ap.add_argument("--cache-kb", type=int, default=512)
     ap.add_argument("--block-tokens", type=int, default=8)
     ap.add_argument("--shared-prefix", type=int, default=32)

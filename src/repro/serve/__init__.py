@@ -1,6 +1,9 @@
-"""repro.serve — continuous-batching engine over a LERC-evicted radix
-prefix cache (the paper's all-or-nothing property on KV block chains)."""
+"""repro.serve — continuous-batching engine over a DAG-aware radix prefix
+cache (the paper's all-or-nothing property on KV block chains), sharing
+the core eviction substrate (DagState counters + EvictionIndex)."""
 from .engine import Request, ServeEngine
 from .prefix_store import Node, PrefixStore
+from .reference import ReferencePrefixStore
 
-__all__ = ["Request", "ServeEngine", "Node", "PrefixStore"]
+__all__ = ["Request", "ServeEngine", "Node", "PrefixStore",
+           "ReferencePrefixStore"]

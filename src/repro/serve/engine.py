@@ -99,15 +99,26 @@ class ServeEngine:
     # -------------------------------------------------------- cache plumbing
     def _copy_chain_in(self, slot: int, payloads: List[Dict]) -> int:
         """Write resident chain payloads into the slot cache; returns the
-        number of prefix tokens restored."""
+        number of prefix tokens restored.
+
+        The restored chain is contiguous from position 0, so the per-block
+        writes collapse into ONE dynamic-update-slice per cache leaf: the
+        blocks are concatenated on host along the token axis and written in
+        a single ``.at[].set`` per leaf (instead of blocks × leaves ops)."""
+        if not payloads:
+            return 0
         bt = self.store.block_tokens
-        for j, payload in enumerate(payloads):
-            t0 = j * bt
+        per_leaf: Dict[Tuple[str, ...], List[np.ndarray]] = {}
+        for payload in payloads:
             for path, arr in payload.items():
-                leaf = self._leaf(path)
-                self._set_leaf(path, leaf.at[..., slot, t0:t0 + bt, :, :]
-                               .set(jnp.asarray(arr)))
-        return len(payloads) * bt
+                per_leaf.setdefault(path, []).append(np.asarray(arr))
+        n_tok = len(payloads) * bt
+        for path, blocks in per_leaf.items():
+            chain = jnp.asarray(np.concatenate(blocks, axis=-3))
+            leaf = self._leaf(path)
+            self._set_leaf(path,
+                           leaf.at[..., slot, 0:n_tok, :, :].set(chain))
+        return n_tok
 
     def _leaf(self, path):
         node = self.cache

@@ -1,19 +1,38 @@
-"""Radix prefix cache with LERC eviction — the paper's idea, 8 years later.
+"""Radix prefix cache with DAG-aware eviction — the paper's idea, 8 years
+later, running on the paper's own machinery.
 
 A served request hits the KV prefix cache only if **every** block along
 its prefix chain is resident: a resident block whose ancestor was evicted
 is useless (prefill must restart at the first gap). That is precisely the
-paper's all-or-nothing property with peer-groups generalized to *chains*:
+paper's all-or-nothing property with peer groups generalized to *chains*,
+and this store is now a thin client of the same incremental substrate the
+batch layer uses (``core.DagState`` + ``core.EvictionIndex``), instead of
+re-deriving reference counts from scratch on every eviction.
 
-* peer group of request r  = the chain of blocks root→leaf(r);
-* a reference of block b by request r is EFFECTIVE iff every ancestor of
-  b on r's chain is resident (Def. 2, chain form);
-* LERC evicts the resident block with the fewest effective references,
-  deepest-first on ties (evicting a leaf never breaks another chain).
+The chain→peer-group adapter: a pending request r with chain n1→…→nk
+contributes one *task* per chain position i, whose peer group is the
+ancestor set {n1…ni} and whose (virtual) output is never materialized
+while r is pending. Under the paper's Definitions this yields, per the
+shared incremental counters:
 
-Baselines for the benchmark: LRU (recency of block touch) and LRC (plain
-reference count = #queued requests whose chain contains the block,
-resident-ancestors or not).
+* ``ref_count[b]``     = Σ over pending chains of the positions at or
+  below b — a *depth-weighted* reference count (an ancestor is worth at
+  least as much as any of its descendants);
+* ``eff_ref_count[b]`` = the same sum restricted to positions whose whole
+  prefix is resident (Def. 2, chain form).
+
+The old "deepest-first on ties" rule survives in two parts: while a chain
+is referenced, depth-weighting orders it automatically (a leaf's (erc, rc)
+is ≤ its parent's on the same chain); once a chain has no pending
+references, the leaf→root clock stamping in ``lookup``/``insert`` makes
+recency ties evict leaves before ancestors. Either way, evicting a victim
+never orphans resident descendants.
+
+Every ``core`` policy (lru/mru/fifo/lfu/lrc/lerc/sticky/belady) is
+available via ``make_policy``; metrics are ``core.metrics.CacheMetrics``.
+Victim selection is O(log n) heap pops against incrementally-maintained
+counters; the retained brute-force oracle lives in ``serve.reference`` and
+the equivalence tests prove identical eviction decisions.
 
 Payloads are per-block KV arrays (host memory); the engine copies the hit
 chain into a device slot at admission, so a longer effective chain is
@@ -23,7 +42,10 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from ..core import (BlockMeta, CacheMetrics, DagState, EvictionIndex,
+                    JobDAG, Policy, TaskSpec, make_policy)
 
 TokenBlock = Tuple[int, ...]
 
@@ -36,35 +58,36 @@ class Node:
     nbytes: int = 0
     resident: bool = False
     children: Dict[TokenBlock, "Node"] = field(default_factory=dict)
-    last_touch: int = 0
     uid: int = 0
 
-    def depth(self) -> int:
-        d, n = 0, self
-        while n.parent is not None:
-            d, n = d + 1, n.parent
-        return d
+    @property
+    def block_id(self) -> str:
+        return f"n{self.uid}"
 
 
 class PrefixStore:
-    def __init__(self, capacity_bytes: int, policy: str = "lerc",
+    def __init__(self, capacity_bytes: int,
+                 policy: Union[str, Policy] = "lerc",
                  block_tokens: int = 16) -> None:
-        assert policy in ("lru", "lrc", "lerc")
         self.capacity = capacity_bytes
-        self.policy = policy
         self.block_tokens = block_tokens
         self.root = Node(key=(), parent=None, resident=True)
         self.used = 0
-        self._clock = itertools.count(1)
         self._uids = itertools.count(1)
+        self._req_ids = itertools.count(1)
+        # the shared substrate: chain nodes are blocks, pending-request
+        # prefixes are peer groups, counters update in O(degree) per event
+        self.dag = JobDAG()
+        self.state = DagState(self.dag)
+        self.policy = policy if isinstance(policy, Policy) \
+            else make_policy(policy)
+        self.index = EvictionIndex(self.policy, self.state)
+        self.metrics_obj = CacheMetrics()
+        self._nodes: Dict[str, Node] = {}          # block id -> node
         # outstanding (queued/admitted-not-yet-prefilled) request chains
         self._pending: Dict[int, List[Node]] = {}
-        self._req_ids = itertools.count(1)
-        # metrics
-        self.accesses = 0
-        self.hits = 0
-        self.effective_hits = 0
-        self.evictions = 0
+        self._req_tasks: Dict[int, List[str]] = {}  # rid -> task ids
+        self.eviction_log: List[str] = []           # block ids, in order
 
     # ------------------------------------------------------------ structure
     def _blocks(self, tokens: Sequence[int]) -> List[TokenBlock]:
@@ -85,119 +108,125 @@ class PrefixStore:
                     break
                 child = Node(key=key, parent=node, uid=next(self._uids))
                 node.children[key] = child
+                # a chain node is always "materialized" (recomputable by
+                # prefill); it is cached only while resident
+                self.dag.add_block(BlockMeta(id=child.block_id, size=0,
+                                             dataset="kv", index=child.uid))
+                self.state.on_materialized(child.block_id, into_cache=False)
+                self._nodes[child.block_id] = child
             chain.append(child)
             node = child
         return chain
 
     # ------------------------------------------------------------- requests
     def register_request(self, tokens: Sequence[int]) -> int:
-        """Announce a request (queued). Its chain contributes reference
-        counts until ``complete_request``. Returns a request id."""
+        """Announce a request (queued). Each prefix of its chain becomes a
+        live peer group until ``complete_request``. Returns a request id."""
         rid = next(self._req_ids)
-        self._pending[rid] = self._walk(tokens, create=True)
+        chain = self._walk(tokens, create=True)
+        self._pending[rid] = chain
+        tids: List[str] = []
+        job = f"req{rid}"
+        for i in range(len(chain)):
+            tid = f"{job}.{i}"
+            out = f"out:{tid}"
+            self.dag.add_block(BlockMeta(id=out, size=0, dataset="req",
+                                         index=i))
+            self.dag.add_task(TaskSpec(
+                id=tid, inputs=tuple(n.block_id for n in chain[:i + 1]),
+                output=out, job=job))
+            self.state.on_task_added(tid)
+            tids.append(tid)
+        self._req_tasks[rid] = tids
         return rid
 
     def complete_request(self, rid: int) -> None:
+        """Retire a request: its chain's references leave the counters and
+        its peer-group tasks are garbage-collected from the DAG."""
+        for tid in self._req_tasks.pop(rid, []):
+            self.state.on_task_removed(tid)
+            self.dag.remove_task(tid, remove_output=True)
         self._pending.pop(rid, None)
 
     # ---------------------------------------------------------------- reads
     def lookup(self, tokens: Sequence[int]) -> List[Node]:
         """Longest fully-resident chain from the root (the usable prefix).
-        Records per-block hit/effective-hit metrics along the way."""
+        Records per-block hit/effective-hit metrics along the way.
+
+        Policy clocks are stamped leaf→root, so within one lookup an
+        ancestor is always *more* recent than its descendants: recency
+        ties evict leaves before ancestors (the seed's deepest-first rule,
+        now expressed through the shared policy clocks — evicting a leaf
+        never orphans resident descendants)."""
         chain = self._walk(tokens)
         usable: List[Node] = []
+        touched: List[Node] = []
         broken = False
-        t = next(self._clock)
         for node in chain:
-            self.accesses += 1
-            if node.resident:
-                self.hits += 1
-                if not broken:
-                    self.effective_hits += 1
-                    usable.append(node)
-                node.last_touch = t
-            if not node.resident:
+            hit = node.resident
+            if not hit:
                 broken = True
+            self.metrics_obj.record_access(hit=hit,
+                                           effective=hit and not broken)
+            if hit:
+                if not broken:
+                    usable.append(node)
+                touched.append(node)
+        for node in reversed(touched):            # leaf first, root last
+            self.policy.on_access(node.block_id)
         return usable
 
     # --------------------------------------------------------------- writes
     def insert(self, tokens: Sequence[int], payloads: List[Any],
                nbytes_per_block: int) -> None:
-        """Store KV payloads for the chain of ``tokens`` (post-prefill)."""
+        """Store KV payloads for the chain of ``tokens`` (post-prefill).
+        Recency/insertion clocks are stamped leaf→root (see ``lookup``)."""
         chain = self._walk(tokens, create=True)
-        t = next(self._clock)
+        exclude = {n.block_id for n in chain}
+        fresh: List[Node] = []
         for node, payload in zip(chain, payloads):
             if node.resident:
                 continue
-            self._make_room(nbytes_per_block, exclude=set(
-                n.uid for n in chain))
+            self._make_room(nbytes_per_block, exclude=exclude)
             node.payload = payload
             node.nbytes = nbytes_per_block
             node.resident = True
-            node.last_touch = t
             self.used += nbytes_per_block
+            self.state.on_loaded(node.block_id)   # flips prefixes complete
+            self.index.add(node.block_id)
+            fresh.append(node)
+        for node in reversed(fresh):              # leaf first, root last
+            self.policy.on_insert(node.block_id)
 
-    # -------------------------------------------------------------- counts
-    def _ref_counts(self) -> Tuple[Dict[int, int], Dict[int, int]]:
-        """(plain reference count, effective reference count) per node uid,
-        over the pending request chains."""
-        rc: Dict[int, int] = {}
-        erc: Dict[int, int] = {}
-        for chain in self._pending.values():
-            broken = False
-            for node in chain:
-                rc[node.uid] = rc.get(node.uid, 0) + 1
-                if not node.resident:
-                    broken = True
-                if not broken:
-                    # every block up to here has all ancestors resident
-                    erc[node.uid] = erc.get(node.uid, 0) + 1
-        return rc, erc
-
-    def _resident_nodes(self) -> List[Node]:
-        out: List[Node] = []
-        stack = [self.root]
-        while stack:
-            n = stack.pop()
-            stack.extend(n.children.values())
-            if n is not self.root and n.resident:
-                out.append(n)
-        return out
-
+    # ------------------------------------------------------------- eviction
     def _make_room(self, needed: int, exclude: set) -> None:
+        """Pop victims off the index until ``needed`` bytes fit. Each pop
+        is O(log n); the state update after each eviction re-keys exactly
+        the blocks whose prefixes it broke, so the next pop already sees
+        the flip (the per-victim semantics of the paper's protocol)."""
         while self.used + needed > self.capacity:
-            victims = [n for n in self._resident_nodes()
-                       if n.uid not in exclude]
-            if not victims:
+            victim = self.index.pop_min(exclude=exclude)
+            if victim is None:
                 return
-            rc, erc = self._ref_counts()
-            if self.policy == "lru":
-                key = lambda n: (n.last_touch, -n.depth())
-            elif self.policy == "lrc":
-                key = lambda n: (rc.get(n.uid, 0), n.last_touch)
-            else:  # lerc: fewest effective refs; deepest first on ties
-                key = lambda n: (erc.get(n.uid, 0), rc.get(n.uid, 0),
-                                 -n.depth(), n.last_touch)
-            victim = min(victims, key=key)
-            self._evict(victim)
+            self._evict(self._nodes[victim])
 
     def _evict(self, node: Node) -> None:
         node.resident = False
         node.payload = None
         self.used -= node.nbytes
         node.nbytes = 0
-        self.evictions += 1
-        # a resident chain through this node is now broken for descendants;
-        # ERC of descendants drops automatically via _ref_counts (the
-        # "complete -> incomplete" flip of the paper's protocol)
+        self.metrics_obj.evictions += 1
+        self.eviction_log.append(node.block_id)
+        self.index.discard(node.block_id)     # no-op when popped off
+        self.policy.on_remove(node.block_id)
+        # complete -> incomplete flips of every pending prefix through this
+        # node propagate incrementally (the paper's broadcast moment)
+        self.state.on_evicted(node.block_id)
 
     # -------------------------------------------------------------- metrics
+    @property
+    def evictions(self) -> int:
+        return self.metrics_obj.evictions
+
     def metrics(self) -> Dict[str, float]:
-        return {
-            "accesses": self.accesses,
-            "hit_ratio": self.hits / self.accesses if self.accesses else 0.0,
-            "effective_hit_ratio": (self.effective_hits / self.accesses
-                                    if self.accesses else 0.0),
-            "evictions": self.evictions,
-            "used_bytes": self.used,
-        }
+        return {**self.metrics_obj.as_dict(), "used_bytes": self.used}

@@ -10,9 +10,12 @@ the *max* is the paper's all-or-nothing bottleneck — one cold peer hides
 every warm one.
 
 The simulator drives the same ``CacheManager``/``DagState``/policy code that
-the real data pipeline uses; only time is simulated. Coordination messages
-are counted with the paper's protocol semantics (one broadcast per
-complete→incomplete flip of a peer group).
+the real data pipeline uses; only time is simulated. Victim selection runs
+on each manager's ``EvictionIndex`` (O(log n) pops; job submission rebuilds
+the index keys via the DagState listener), so large sweeps no longer pay a
+full sort per eviction batch. Coordination messages are counted with the
+paper's protocol semantics (one broadcast per complete→incomplete flip of
+a peer group).
 """
 from __future__ import annotations
 

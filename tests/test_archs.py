@@ -5,6 +5,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# the arch sweep is the bulk of the suite's wall time (~3 min): opt-in
+pytestmark = pytest.mark.slow
+
 from repro import configs
 from repro.models import (decode_step, forward, init_decode_cache,
                           init_params, loss_fn, make_dummy_batch, model_spec,

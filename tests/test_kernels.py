@@ -1,9 +1,12 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.kernels import flash_attention, rglru_scan, rwkv6_wkv

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the system's invariants."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev.txt)")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import (BlockMeta, CacheManager, DagState, JobDAG, TaskSpec,

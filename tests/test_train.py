@@ -44,6 +44,7 @@ def test_schedule_warmup_and_cosine():
     assert 0.1 < mid < 1.0
 
 
+@pytest.mark.slow
 def test_grad_accumulation_equivalent():
     """microbatches=2 must equal microbatches=1 on the same global batch."""
     cfg = configs.get("qwen2_7b", smoke=True).replace(dtype=jnp.float32)
@@ -138,6 +139,7 @@ def test_async_checkpointer(tmp_path):
     assert latest(str(tmp_path)).endswith("step_00000003")
 
 
+@pytest.mark.slow
 def test_resume_bitwise_identical(tmp_path):
     """Train 6 steps; checkpoint at 3; resume and re-run 3..6: the final
     parameters must match the uninterrupted run bitwise."""
