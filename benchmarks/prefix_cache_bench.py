@@ -62,7 +62,8 @@ def main() -> None:
     params = init_params(jax.random.key(0), model_spec(cfg),
                          dtype=cfg.dtype)
     probe = ServeEngine(cfg, params, max_slots=1, max_seq=64,
-                        store=PrefixStore(1 << 30, "lerc", block_tokens=8))
+                        store=PrefixStore(1 << 30, "lerc", block_tokens=8),
+                        pool_blocks=1)
     blk = probe._block_nbytes()
     budget = blk * 12               # ~12 resident blocks
     rows = [run_policy(p, cache_bytes=budget) for p in POLICIES]

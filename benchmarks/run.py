@@ -30,6 +30,7 @@ def main(argv=None) -> None:
                      ("group_size_scaling", "group_size"),
                      ("eviction_scaling", "eviction_scaling"),
                      ("prefix_cache_bench", "prefix_cache"),
+                     ("serve_throughput", "serve_throughput"),
                      ("pipeline_bench", "pipeline"),
                      ("roofline", "roofline")):
         try:

@@ -1,0 +1,112 @@
+"""Serve hot-path throughput: legacy (token-at-a-time, host-payload KV)
+vs the PR 2 data plane (chunked prefill + device-resident paged KV pool).
+
+Shared-prefix workload on the real smoke model. Reports engine steps
+(jitted dispatches), wall-clock, and end-to-end tokens/s for each engine;
+the acceptance target is >=3x tokens/s and >=4x fewer prefill dispatches
+at prefill_chunk=8. Each engine is warmed on a tiny throwaway workload
+first so compile time is excluded from the measured window.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import print_table, save_results
+
+# prefill-dominated shape: this PR optimizes the prompt hot path (decode
+# steps cost the same in both engines and would dilute the signal)
+N_REQUESTS = 16
+N_FAMILIES = 4
+PREFIX = 72
+SUFFIX = 8
+MAX_NEW = 4
+MAX_SEQ = 128
+BT = 8
+
+
+def _workload(vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    prefixes = [list(rng.integers(0, vocab, PREFIX))
+                for _ in range(N_FAMILIES)]
+    return [prefixes[i % N_FAMILIES]
+            + list(rng.integers(0, vocab, SUFFIX))
+            for i in range(N_REQUESTS)]
+
+
+def _run(make_engine, reqs) -> dict:
+    # warm-up: run the FULL workload on a throwaway engine so every
+    # (batch, chunk, pool-transfer) specialization is compiled before the
+    # measured window (jitted fns are shared per-config across engines)
+    warm = make_engine()
+    for r in reqs:
+        warm.submit(r, max_new=MAX_NEW)
+    warm.run()
+    # best-of-3: CPU wall-clock noise at smoke scale rivals the signal
+    wall = float("inf")
+    for _ in range(3):
+        eng = make_engine()
+        t0 = time.perf_counter()
+        for r in reqs:
+            eng.submit(r, max_new=MAX_NEW)
+        eng.run()
+        wall = min(wall, time.perf_counter() - t0)
+    m = eng.metrics()
+    tokens = m["prefill_tokens"] + m["decoded_tokens"]
+    return {
+        "engine_steps": m["engine_steps"],
+        "wall_s": round(wall, 3),
+        "tokens": tokens,
+        "tokens_per_s": round(tokens / wall, 1),
+        "prefill_saved_frac": round(m["prefill_saved_frac"], 3),
+        "evictions": m["evictions"],
+    }
+
+
+def main() -> None:
+    import jax
+    from repro import configs
+    from repro.models import init_params, model_spec
+    from repro.serve import LegacyServeEngine, PrefixStore, ServeEngine
+
+    cfg = configs.get("qwen2_7b", smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                        dtype=cfg.dtype)
+    reqs = _workload(cfg.vocab)
+
+    probe = ServeEngine(cfg, params, max_slots=3, max_seq=MAX_SEQ,
+                        store=PrefixStore(1 << 30, "lerc", block_tokens=BT),
+                        pool_blocks=1)
+    budget = probe._block_nbytes() * 16
+
+    def legacy():
+        return LegacyServeEngine(
+            cfg, params, max_slots=3, max_seq=MAX_SEQ,
+            store=PrefixStore(budget, "lerc", block_tokens=BT))
+
+    def pooled(chunk):
+        return lambda: ServeEngine(
+            cfg, params, max_slots=3, max_seq=MAX_SEQ,
+            store=PrefixStore(budget, "lerc", block_tokens=BT),
+            prefill_chunk=chunk)
+
+    rows = [{"engine": "legacy (host KV, chunk=1)", **_run(legacy, reqs)}]
+    for chunk in (4, 8):
+        rows.append({"engine": f"pooled (device KV, chunk={chunk})",
+                     **_run(pooled(chunk), reqs)})
+    print_table("Serve hot path: old vs new data plane", rows,
+                ["engine", "engine_steps", "wall_s", "tokens",
+                 "tokens_per_s", "prefill_saved_frac", "evictions"])
+    save_results("serve_throughput", rows)
+
+    base, best = rows[0], rows[-1]
+    speedup = best["tokens_per_s"] / base["tokens_per_s"]
+    step_ratio = base["engine_steps"] / best["engine_steps"]
+    print(f"\npooled+chunked vs legacy: {speedup:.1f}x tokens/s, "
+          f"{step_ratio:.1f}x fewer dispatches "
+          f"(target: >=3x tokens/s at smoke scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,7 +32,8 @@ def main() -> int:
                          dtype=cfg.dtype)
 
     # size the budget to 8 blocks so eviction pressure is real
-    probe = ServeEngine(cfg, params, max_slots=1, max_seq=96)
+    probe = ServeEngine(cfg, params, max_slots=1, max_seq=96,
+                        pool_blocks=1)
     budget = probe._block_nbytes() * 8
 
     rng = np.random.default_rng(0)

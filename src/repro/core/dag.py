@@ -70,18 +70,21 @@ class JobDAG:
     def __init__(self) -> None:
         self.blocks: Dict[BlockId, BlockMeta] = {}
         self.tasks: Dict[TaskId, TaskSpec] = {}
-        # block -> tasks that read it
-        self.consumers: Dict[BlockId, List[TaskId]] = {}
+        # block -> tasks that read it. Insertion-ordered dict used as an
+        # ordered set: iteration matches the old list semantics, but
+        # retirement (serve traffic: one per completed request chain
+        # position) is O(1) instead of O(consumers).
+        self.consumers: Dict[BlockId, Dict[TaskId, None]] = {}
         # block -> task that produces it (None for source blocks)
         self.producer: Dict[BlockId, TaskId] = {}
-        self.jobs: Dict[JobId, List[TaskId]] = {}
+        self.jobs: Dict[JobId, Dict[TaskId, None]] = {}
 
     # ------------------------------------------------------------------ build
     def add_block(self, block: BlockMeta) -> BlockMeta:
         if block.id in self.blocks:
             raise ValueError(f"duplicate block {block.id}")
         self.blocks[block.id] = block
-        self.consumers.setdefault(block.id, [])
+        self.consumers.setdefault(block.id, {})
         return block
 
     def add_source(self, dataset: str, index: int, size: int,
@@ -103,8 +106,8 @@ class JobDAG:
         self.tasks[task.id] = task
         self.producer[task.output] = task.id
         for b in task.inputs:
-            self.consumers[b].append(task.id)
-        self.jobs.setdefault(task.job, []).append(task.id)
+            self.consumers[b][task.id] = None
+        self.jobs.setdefault(task.job, {})[task.id] = None
         return task
 
     def remove_task(self, tid: TaskId, remove_output: bool = False) -> TaskSpec:
@@ -114,13 +117,12 @@ class JobDAG:
         task = self.tasks.pop(tid)
         for b in task.inputs:
             consumers = self.consumers.get(b)
-            if consumers is not None and tid in consumers:
-                consumers.remove(tid)
+            if consumers is not None:
+                consumers.pop(tid, None)
         self.producer.pop(task.output, None)
         job_tasks = self.jobs.get(task.job)
         if job_tasks is not None:
-            if tid in job_tasks:
-                job_tasks.remove(tid)
+            job_tasks.pop(tid, None)
             if not job_tasks:
                 del self.jobs[task.job]
         if remove_output:
@@ -347,3 +349,12 @@ class DagState:
         """Block deleted entirely (unpersisted): treated as eviction."""
         self.on_evicted(block)
         self.materialized.discard(block)
+
+    def forget_block(self, block: BlockId) -> None:
+        """Drop every trace of a block that no live task references (serve:
+        radix-skeleton GC). The caller guarantees ``ref_count`` is zero, so
+        no counters or group labels change — this only bounds the dicts."""
+        self.cached.discard(block)
+        self.materialized.discard(block)
+        self.ref_count.pop(block, None)
+        self.eff_ref_count.pop(block, None)

@@ -32,6 +32,11 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--block-tokens", type=int, default=8)
     ap.add_argument("--shared-prefix", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens per slot per engine step")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="device KV pool size in blocks "
+                         "(default: sized to --cache-kb)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -42,7 +47,9 @@ def serve_main(argv=None) -> int:
                         policy=args.policy,
                         block_tokens=args.block_tokens)
     eng = ServeEngine(cfg, params, max_slots=args.slots,
-                      max_seq=args.max_seq, store=store)
+                      max_seq=args.max_seq, store=store,
+                      prefill_chunk=args.prefill_chunk,
+                      pool_blocks=args.pool_blocks)
 
     rng = np.random.default_rng(args.seed)
     n_families = max(args.requests // 4, 1)

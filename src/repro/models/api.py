@@ -85,13 +85,19 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
-                mesh_ctx=None, unroll: int = 1):
-    """(logits (B,1,V), new_cache). pos: scalar absolute position."""
+                mesh_ctx=None, unroll: int = 1, seq_lens=None):
+    """(logits (B,1,V), new_cache). tokens: (B,S) — S=1 for plain decode,
+    S>1 for chunked prefill (per-row start ``pos``, real lengths
+    ``seq_lens``). pos: scalar absolute position or (B,) per-slot."""
     if cfg.family == "encdec":
+        if seq_lens is not None or tokens.shape[1] != 1:
+            raise NotImplementedError(
+                "chunked decode is decoder-LM only (encdec is S=1)")
         return ED.encdec_decode_step(cfg, params, cache, tokens, pos,
                                      mesh_ctx=mesh_ctx, unroll=unroll)
     return LM.lm_decode_step(cfg, params, cache, tokens, pos,
-                             mesh_ctx=mesh_ctx, unroll=unroll)
+                             mesh_ctx=mesh_ctx, unroll=unroll,
+                             seq_lens=seq_lens)
 
 
 # ---------------------------------------------------------------------------

@@ -201,18 +201,25 @@ def attention(cfg: ModelConfig, params, x, *, positions, window=None,
         q, k, v = _tp_qkv_constraints(mesh_ctx, q, k, v)
 
     if cache is not None:
+        # ``cache_valid_len`` is the valid cache length as seen by the
+        # FIRST query token; query token j of a chunk sees j more (its own
+        # write and its intra-chunk predecessors) — per-token causality for
+        # Sq > 1 (chunked prefill), and exactly the old semantics at Sq=1.
         if getattr(cache_pos, "ndim", 0) == 1:
-            # per-slot positions (continuous batching): scatter writes
-            bidx = jnp.arange(B)
-            ck = cache["k"].at[bidx, cache_pos].set(
-                k[:, 0].astype(cache["k"].dtype))
-            cv = cache["v"].at[bidx, cache_pos].set(
-                v[:, 0].astype(cache["v"].dtype))
+            # per-slot positions (continuous batching): each slot scatters
+            # its Sq-token chunk at its own offset. Positions are absolute
+            # (slot order == position) — rolling-window caches take the
+            # bulk path.
+            bidx = jnp.arange(B)[:, None]                        # (B,1)
+            tpos = cache_pos[:, None] + jnp.arange(Sq)[None, :]  # (B,Sq)
+            ck = cache["k"].at[bidx, tpos].set(k.astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, tpos].set(v.astype(cache["v"].dtype))
             Skv = ck.shape[1]
-            valid = (cache_pos + Sq if cache_valid_len is None
-                     else cache_valid_len)
-            m = jnp.arange(Skv)[None, :] < valid[:, None]       # (B, Skv)
-            out = _sdpa(cfg, q, ck, cv, m[:, None, None, :])
+            base = (cache_pos + 1 if cache_valid_len is None
+                    else cache_valid_len)
+            valid = base[:, None] + jnp.arange(Sq)[None, :]      # (B,Sq)
+            m = jnp.arange(Skv)[None, None, :] < valid[:, :, None]
+            out = _sdpa(cfg, q, ck, cv, m[:, None])              # (B,1,Sq,Skv)
         else:
             # bulk decode: one shared position, dynamic-update-slice
             ck = jax.lax.dynamic_update_slice(
@@ -220,9 +227,10 @@ def attention(cfg: ModelConfig, params, x, *, positions, window=None,
             cv = jax.lax.dynamic_update_slice(
                 cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
             Skv = ck.shape[1]
-            if cache_valid_len is None:
-                cache_valid_len = cache_pos + Sq
-            m = jnp.arange(Skv)[None, :] < cache_valid_len
+            base = (cache_pos + 1 if cache_valid_len is None
+                    else cache_valid_len)
+            valid = base + jnp.arange(Sq)                        # (Sq,)
+            m = jnp.arange(Skv)[None, :] < valid[:, None]        # (Sq,Skv)
             out = _sdpa(cfg, q, ck, cv, m[None, None, :, :])
         new_cache = {"k": ck, "v": cv}
     else:

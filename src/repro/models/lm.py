@@ -273,18 +273,36 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
-                   mesh_ctx=None, unroll: int = 1):
-    """One decode step. tokens: (B,1); pos: scalar int32 (bulk decode, all
-    rows aligned) or (B,) int32 (continuous batching, per-slot positions).
-    For L layers the cache is a rolling window written at ``pos % window``.
+                   mesh_ctx=None, unroll: int = 1, seq_lens=None):
+    """One decode step over a chunk of S tokens per row. tokens: (B,S);
+    pos: scalar int32 (bulk decode, all rows aligned) or (B,) int32
+    (continuous batching, per-slot start positions). For L layers the
+    cache is a rolling window written at ``pos % window``.
+
+    ``seq_lens`` (B,) gives the number of *real* tokens per row (rows are
+    right-padded to the chunk width S); the logits returned are those of
+    each row's last real token. Without ``seq_lens`` the last column is
+    used (the S=1 decode semantics).
+
+    Chunked prefill (S > 1 with per-slot ``pos``) writes each row's chunk
+    at its own absolute offset — supported for G/M (global-attention)
+    layers, whose cache slot order equals absolute position.
 
     Returns (logits (B,1,vocab), new_cache).
     """
     pat, n_rep, tail = unit_pattern(cfg)
+    B, S = tokens.shape
+    per_slot = getattr(pos, "ndim", 0) == 1
+    if S > 1:
+        unsupported = set(pat + tail) - {"G", "M"}
+        if unsupported:
+            raise NotImplementedError(
+                "chunked prefill needs absolute-position KV caches; layer"
+                f" kinds {sorted(unsupported)} are rolling/recurrent")
     h = L.embed(cfg, params["embed"], tokens)
-    positions = (pos[:, None].astype(jnp.int32)
-                 if getattr(pos, "ndim", 0) == 1
-                 else jnp.full((1, 1), pos, jnp.int32))
+    positions = (pos[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)[None, :]
+                 if per_slot
+                 else jnp.full((1, 1), pos, jnp.int32) + jnp.arange(S, dtype=jnp.int32)[None, :])
 
     def sub_cache_pos(kind):
         if kind == "L":
@@ -337,6 +355,12 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
                                 cache_pos=sub_cache_pos(k),
                                 cache_valid_len=sub_valid_len(k))
         new_cache[key] = nc
+    if S > 1 or seq_lens is not None:
+        # unembed only each row's last real token (padded rows are junk and
+        # a full (B,S,V) logit tensor is wasted work)
+        last = (jnp.maximum(seq_lens - 1, 0) if seq_lens is not None
+                else jnp.full((B,), S - 1, jnp.int32))
+        h = jnp.take_along_axis(h, last[:, None, None], axis=1)
     h = L.norm(cfg, params["ln_f"], h)
     logits = L.unembed(cfg, params["embed"], h, mesh_ctx)
     return logits, new_cache

@@ -1,9 +1,14 @@
-"""repro.serve — continuous-batching engine over a DAG-aware radix prefix
-cache (the paper's all-or-nothing property on KV block chains), sharing
-the core eviction substrate (DagState counters + EvictionIndex)."""
+"""repro.serve — continuous-batching engine (chunked prefill, paged
+device-resident KV pool) over a DAG-aware radix prefix cache (the paper's
+all-or-nothing property on KV block chains), sharing the core eviction
+substrate (DagState counters + EvictionIndex). ``LegacyServeEngine`` and
+``ReferencePrefixStore`` are the frozen pre-optimization baselines the
+equivalence tests and benchmarks measure against."""
 from .engine import Request, ServeEngine
+from .kv_pool import KVBlockPool
+from .legacy import LegacyServeEngine
 from .prefix_store import Node, PrefixStore
 from .reference import ReferencePrefixStore
 
-__all__ = ["Request", "ServeEngine", "Node", "PrefixStore",
-           "ReferencePrefixStore"]
+__all__ = ["Request", "ServeEngine", "LegacyServeEngine", "KVBlockPool",
+           "Node", "PrefixStore", "ReferencePrefixStore"]

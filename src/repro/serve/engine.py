@@ -1,26 +1,40 @@
-"""Continuous-batching serve engine with a LERC prefix cache underneath.
+"""Continuous-batching serve engine: chunked prefill over a device-resident
+paged KV pool, with a LERC prefix cache underneath.
 
-Token-level (Orca-style) scheduling: every engine step runs ONE batched
-``decode_step`` over all active slots; a slot in *prefill phase* consumes
-its next prompt token, a slot in *decode phase* consumes the token it
-generated last step. Admission copies the longest fully-resident prefix
-chain from the ``PrefixStore`` into the slot's KV cache, so every
-effective chain block is ``block_tokens`` prompt tokens that never hit the
-MXU — prefill savings are measured in real skipped steps, not simulated.
+The serving data plane (PR 2) is built so the hot path is dominated by
+real compute, not Python-loop and PCIe overhead — the regime where the
+paper's claim (coordinated caching speeds up *jobs*) is measurable:
 
-Per-slot positions require vectorized cache writes; ``layers.attention``
-takes ``cache_pos`` as an (B,) array for this engine (scatter write) and a
-scalar for the bulk decode path (dynamic-update-slice).
+* **Chunked prefill** — each engine step feeds up to ``prefill_chunk``
+  prompt tokens per slot through one batched ``decode_step`` (per-slot
+  scatter writes in ``layers.attention`` handle ``Sq > 1`` chunks at
+  per-slot offsets), so a P-token prompt costs ~ceil(P/chunk) dispatches
+  instead of ~P. Prefill-chunk slots and decode slots share the dispatch;
+  decode rows are right-padded and masked.
+* **Paged KV pool** — prefix-cache payloads are indices into a
+  preallocated per-leaf device pool (``serve.kv_pool.KVBlockPool``). A hit
+  is a jitted gather pool→slot, an insert a jitted scatter slot→pool of
+  exactly the fresh blocks, and an eviction frees one index — zero
+  host↔device KV copies anywhere on the hit/insert path.
+
+Store-visible behavior (the sequence of ``register_request`` / ``lookup``
+/ ``insert`` / ``complete_request`` calls and therefore every eviction
+decision) is unchanged from the legacy engine on workloads with uniform
+prompt/generation lengths; ``tests/test_engine_equivalence.py`` proves
+token-identical generations and bit-identical eviction logs against both
+``LegacyServeEngine`` and the brute-force ``ReferencePrefixStore``.
 
 The engine supports uniform global-attention patterns (every cache leaf a
-KV buffer) — smoke-scale configs serve as the integration testbed; the
-store itself is payload-agnostic.
+KV buffer indexed by absolute position) — smoke-scale configs serve as
+the integration testbed; the store itself is payload-agnostic.
 """
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from functools import lru_cache
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +42,26 @@ import numpy as np
 
 from ..models import decode_step, init_decode_cache
 from ..models.common import ModelConfig
+from .kv_pool import KVBlockPool, chain_block_nbytes
 from .prefix_store import PrefixStore
+
+# pool rows a default-constructed engine starts with when the store's byte
+# budget is effectively unbounded (the pool doubles on demand)
+_DEFAULT_POOL_BLOCKS = 256
+
+
+@lru_cache(maxsize=None)
+def _step_fn(cfg: ModelConfig):
+    """One shared jitted step per (hashable) config: engines spun up on the
+    same model reuse every compiled (B, S) specialization instead of
+    retracing behind a fresh closure."""
+
+    def _step(p, c, t, pos, lens):
+        logits, new_cache = decode_step(cfg, p, c, t, pos, seq_lens=lens)
+        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), \
+            new_cache
+
+    return jax.jit(_step)
 
 
 @dataclass
@@ -61,11 +94,17 @@ def _kv_leaves(cache) -> List[Tuple[Tuple[str, ...], jax.Array]]:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_seq: int = 256, store: Optional[PrefixStore] = None,
-                 eos_id: int = -1) -> None:
+                 eos_id: int = -1, prefill_chunk: int = 8,
+                 pool_blocks: Optional[int] = None) -> None:
         for path, _ in _kv_leaves(init_decode_cache(cfg, 1, 8)):
             assert path[-1] in ("k", "v"), (
                 "ServeEngine supports uniform-KV patterns; got leaf "
                 f"{'/'.join(path)}")
+        if prefill_chunk > 1:
+            kinds = set(cfg.layer_pattern)
+            assert kinds <= {"G", "M"}, (
+                "chunked prefill needs absolute-position KV caches; "
+                f"pattern {cfg.layer_pattern!r} has rolling/recurrent layers")
         self.cfg = cfg
         self.params = params
         self.B = max_slots
@@ -73,16 +112,23 @@ class ServeEngine:
         self.store = store or PrefixStore(capacity_bytes=1 << 62,
                                           policy="lerc")
         self.eos_id = eos_id
+        self.prefill_chunk = max(int(prefill_chunk), 1)
         self.cache = init_decode_cache(cfg, self.B, max_seq)
 
-        def _step(p, c, t, pos):
-            logits, new_cache = decode_step(cfg, p, c, t, pos)
-            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), \
-                new_cache
+        # ----- paged pool: sized so the store's byte budget, not the pool,
+        # is always the binding constraint (bounded budgets evict — and
+        # free indices — before alloc; unbounded ones rely on growth)
+        bt = self.store.block_tokens
+        blk_bytes = chain_block_nbytes(self.cache, bt)
+        if pool_blocks is None:
+            by_capacity = -(-self.store.capacity // max(blk_bytes, 1))
+            pool_blocks = int(min(by_capacity, _DEFAULT_POOL_BLOCKS))
+        self.pool = KVBlockPool(self.cache, bt, pool_blocks)
+        self.store.evict_payload = self.pool.free
 
-        self._step_fn = jax.jit(_step)
+        self._step_fn = _step_fn(cfg)
         self._rid = itertools.count(1)
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * self.B
         self.steps = 0
         self.decoded_tokens = 0
@@ -97,72 +143,41 @@ class ServeEngine:
         return req
 
     # -------------------------------------------------------- cache plumbing
-    def _copy_chain_in(self, slot: int, payloads: List[Dict]) -> int:
-        """Write resident chain payloads into the slot cache; returns the
-        number of prefix tokens restored.
-
-        The restored chain is contiguous from position 0, so the per-block
-        writes collapse into ONE dynamic-update-slice per cache leaf: the
-        blocks are concatenated on host along the token axis and written in
-        a single ``.at[].set`` per leaf (instead of blocks × leaves ops)."""
-        if not payloads:
-            return 0
-        bt = self.store.block_tokens
-        per_leaf: Dict[Tuple[str, ...], List[np.ndarray]] = {}
-        for payload in payloads:
-            for path, arr in payload.items():
-                per_leaf.setdefault(path, []).append(np.asarray(arr))
-        n_tok = len(payloads) * bt
-        for path, blocks in per_leaf.items():
-            chain = jnp.asarray(np.concatenate(blocks, axis=-3))
-            leaf = self._leaf(path)
-            self._set_leaf(path,
-                           leaf.at[..., slot, 0:n_tok, :, :].set(chain))
-        return n_tok
-
-    def _leaf(self, path):
-        node = self.cache
-        for p in path:
-            node = node[p]
-        return node
-
-    def _set_leaf(self, path, value) -> None:
-        node = self.cache
-        for p in path[:-1]:
-            node = node[p]
-        node[path[-1]] = value
-
-    def _extract_blocks(self, slot: int, n_tokens: int) -> List[Dict]:
-        """Read KV payloads for the first n_tokens of ``slot``, one dict
-        per full block."""
-        bt = self.store.block_tokens
-        n_blocks = n_tokens // bt
-        payloads: List[Dict] = []
-        leaves = _kv_leaves(self.cache)
-        for j in range(n_blocks):
-            t0 = j * bt
-            payloads.append({
-                path: np.asarray(arr[..., slot, t0:t0 + bt, :, :])
-                for path, arr in leaves})
-        return payloads
-
     def _block_nbytes(self) -> int:
-        bt = self.store.block_tokens
-        total = 0
-        for _, arr in _kv_leaves(self.cache):
-            per_tok = arr.nbytes // (arr.shape[-3] * self.B)
-            total += per_tok * bt
-        return total
+        return self.pool.block_nbytes
+
+    def _publish(self, req: Request) -> None:
+        """Prefill complete: publish the prompt's KV chain into the pool.
+        The store makes room first (freeing pool indices O(1), no copies),
+        then the factory allocates one pool row per *fresh* block; a single
+        jitted scatter captures exactly those blocks from the slot."""
+        fresh: List[Tuple[int, int]] = []       # (chain position, pool row)
+
+        def alloc(i, _node):
+            idx = self.pool.alloc()
+            fresh.append((i, idx))
+            return idx
+
+        self.store.insert(req.prompt, alloc, self.pool.block_nbytes)
+        if fresh:
+            self.pool.scatter_from(self.cache, req.slot,
+                                   [i for i, _ in fresh],
+                                   [idx for _, idx in fresh])
 
     # ---------------------------------------------------------------- admit
     def _admit(self) -> None:
         for i in range(self.B):
             if self.slots[i] is not None or not self.queue:
                 continue
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             usable = self.store.lookup(req.prompt)
-            payloads = [n.payload for n in usable]
-            restored = self._copy_chain_in(i, payloads) if payloads else 0
+            restored = 0
+            if usable:
+                # jitted gather pool→slot: the whole resident chain lands
+                # in one dispatch, no host round-trip
+                self.cache = self.pool.gather_into(
+                    self.cache, i, [n.payload for n in usable])
+                restored = len(usable) * self.store.block_tokens
             # the last prompt token is always recomputed: its logits seed
             # generation and were never cached (vLLM does the same)
             restored = min(restored, len(req.prompt) - 1)
@@ -174,41 +189,46 @@ class ServeEngine:
 
     # ----------------------------------------------------------------- step
     def step(self) -> List[Request]:
-        """One engine iteration; returns requests that finished."""
+        """One engine iteration — up to ``prefill_chunk`` prompt tokens per
+        prefilling slot, one token per decoding slot, all in a single
+        batched dispatch. Returns requests that finished."""
         self._admit()
         active = [r for r in self.slots if r is not None]
         if not active:
             return []
-        tokens = np.zeros((self.B, 1), np.int32)
-        pos = np.zeros((self.B,), np.int32)
+        feeds: Dict[int, List[int]] = {}
         for r in active:
             if r.pos < len(r.prompt):                  # prefill phase
-                tokens[r.slot, 0] = r.prompt[r.pos]
-                self.prefill_tokens += 1
+                n = min(self.prefill_chunk, len(r.prompt) - r.pos)
+                feeds[r.slot] = r.prompt[r.pos:r.pos + n]
+                self.prefill_tokens += n
             else:                                      # decode phase
-                tokens[r.slot, 0] = (r.generated[-1] if r.generated
-                                     else r.prompt[-1])
+                feeds[r.slot] = [r.generated[-1] if r.generated
+                                 else r.prompt[-1]]
                 self.decoded_tokens += 1
+        S = max(len(f) for f in feeds.values())
+        tokens = np.zeros((self.B, S), np.int32)
+        pos = np.zeros((self.B,), np.int32)
+        lens = np.zeros((self.B,), np.int32)
+        for r in active:
+            f = feeds[r.slot]
+            tokens[r.slot, :len(f)] = f
             pos[r.slot] = r.pos
+            lens[r.slot] = len(f)
         out_tok, self.cache = self._step_fn(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos))
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos),
+            jnp.asarray(lens))
         out = np.asarray(out_tok)
         self.steps += 1
 
         finished: List[Request] = []
         for r in active:
-            r.pos += 1
+            r.pos += len(feeds[r.slot])
             in_decode = r.pos >= len(r.prompt)
             if in_decode:
-                tok = int(out[r.slot, 0] if out.ndim == 2
-                          else out[r.slot])
-                r.generated.append(tok)
+                r.generated.append(int(out[r.slot]))
             if r.pos == len(r.prompt):
-                # prefill complete: publish the prompt's KV chain
-                n_pub = len(r.prompt)
-                self.store.insert(r.prompt,
-                                  self._extract_blocks(r.slot, n_pub),
-                                  self._block_nbytes())
+                self._publish(r)
             if in_decode and (len(r.generated) >= r.max_new
                               or (self.eos_id >= 0
                                   and r.generated[-1] == self.eos_id)):
@@ -232,6 +252,8 @@ class ServeEngine:
             "prefill_tokens": self.prefill_tokens,
             "prefill_tokens_skipped": self.prefill_tokens_skipped,
             "decoded_tokens": self.decoded_tokens,
+            "pool_blocks": self.pool.num_blocks,
+            "pool_blocks_in_use": self.pool.blocks_in_use,
             "prefill_saved_frac": (
                 self.prefill_tokens_skipped
                 / max(self.prefill_tokens + self.prefill_tokens_skipped, 1)),

@@ -1,0 +1,141 @@
+"""Device-resident paged KV block pool.
+
+The serving data plane's block storage: one preallocated device buffer per
+KV cache leaf, shaped ``(num_blocks, *lead, block_tokens, KV, D)`` (with
+``lead`` the leaf's leading layer-stack axes), plus a host-side free list
+of block indices. A ``PrefixStore`` payload is then ONE ``int`` — the pool
+row holding that chain block's KV for every layer — so:
+
+* a prefix-cache **hit** is a jitted gather pool→slot (one
+  dynamic-update-slice per leaf, the chain is contiguous from position 0);
+* an **insert** is a jitted scatter slot→pool of exactly the fresh blocks;
+* an **eviction** is ``free(idx)`` — O(1), zero copies, and no KV bytes
+  ever round-trip through host memory.
+
+Both transfers are shape-specialized by the number of blocks moved (chain
+lengths are bounded by ``max_seq / block_tokens``, so the trace cache
+stays small). When the free list runs dry under an unbounded-capacity
+store the pool doubles — byte-capacity-driven eviction normally frees
+indices before that happens.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _pool_leaf_shape(leaf_shape: Tuple[int, ...], num_blocks: int,
+                     block_tokens: int) -> Tuple[int, ...]:
+    """Cache leaf (*lead, B, S, KV, D) -> pool (num_blocks, *lead, bt, KV, D)."""
+    return (num_blocks,) + leaf_shape[:-4] + (block_tokens,) + leaf_shape[-2:]
+
+
+def chain_block_nbytes(cache_template, block_tokens: int) -> int:
+    """Bytes of ONE chain block across every KV leaf of ``cache_template``
+    (leaves shaped (*lead, B, S, KV, D)) — the store's nbytes_per_block.
+    The single source of truth for pool sizing AND byte accounting."""
+    return sum(leaf.nbytes // (leaf.shape[-4] * leaf.shape[-3])
+               * block_tokens
+               for leaf in jax.tree.leaves(cache_template))
+
+
+@jax.jit
+def _gather(cache, pool, idxs, slot):
+    """Write pool blocks ``idxs`` into ``slot``'s cache rows at token
+    positions [0, n*bt) — the restored chain is contiguous from 0."""
+
+    def write(leaf, pbuf):
+        n, bt = idxs.shape[0], pbuf.shape[-3]
+        blocks = pbuf[idxs]                         # (n, *lead, bt, KV, D)
+        lead = blocks.ndim - 4
+        blocks = jnp.moveaxis(blocks, 0, lead)      # (*lead, n, bt, KV, D)
+        chain = blocks.reshape(blocks.shape[:lead] + (n * bt,)
+                               + blocks.shape[-2:])
+        upd = jnp.expand_dims(chain, lead)          # (*lead, 1, n*bt, KV, D)
+        starts = (0,) * lead + (slot, 0, 0, 0)
+        return jax.lax.dynamic_update_slice(leaf, upd.astype(leaf.dtype),
+                                            starts)
+
+    return jax.tree.map(write, cache, pool)
+
+
+@jax.jit
+def _scatter(cache, pool, idxs, starts, slot):
+    """Read blocks at token offsets ``starts`` from ``slot``'s cache rows
+    into pool rows ``idxs`` (fresh blocks need not be contiguous: resident
+    prefix blocks are skipped by the store)."""
+
+    def read_write(leaf, pbuf):
+        bt = pbuf.shape[-3]
+        lead = leaf.ndim - 4
+        row = jax.lax.dynamic_index_in_dim(leaf, slot, axis=lead,
+                                           keepdims=False)
+
+        def block_at(t0):
+            return jax.lax.dynamic_slice_in_dim(row, t0, bt, axis=lead)
+
+        blocks = jax.vmap(block_at)(starts)         # (n, *lead, bt, KV, D)
+        return pbuf.at[idxs].set(blocks.astype(pbuf.dtype))
+
+    return jax.tree.map(read_write, cache, pool)
+
+
+class KVBlockPool:
+    """Paged block pool over an engine's KV cache pytree."""
+
+    def __init__(self, cache_template, block_tokens: int,
+                 num_blocks: int) -> None:
+        self.block_tokens = block_tokens
+        self.num_blocks = max(int(num_blocks), 1)
+        self.buffers = jax.tree.map(
+            lambda leaf: jnp.zeros(
+                _pool_leaf_shape(leaf.shape, self.num_blocks, block_tokens),
+                leaf.dtype),
+            cache_template)
+        self.free_list: List[int] = list(range(self.num_blocks - 1, -1, -1))
+        self.block_nbytes = chain_block_nbytes(cache_template, block_tokens)
+        self.grows = 0
+
+    # -------------------------------------------------------------- indices
+    def alloc(self) -> int:
+        if not self.free_list:
+            self._grow()
+        return self.free_list.pop()
+
+    def free(self, idx: Any) -> None:
+        self.free_list.append(int(idx))
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self.free_list)
+
+    def _grow(self) -> None:
+        """Double the pool (unbounded-capacity stores never evict, so the
+        byte budget cannot free indices for us)."""
+        old = self.num_blocks
+        self.num_blocks = old * 2
+        self.buffers = jax.tree.map(
+            lambda pbuf: jnp.concatenate(
+                [pbuf, jnp.zeros_like(pbuf)], axis=0),
+            self.buffers)
+        self.free_list.extend(range(self.num_blocks - 1, old - 1, -1))
+        self.grows += 1
+
+    # ------------------------------------------------------------ transfers
+    def gather_into(self, cache, slot: int, idxs: List[int]):
+        """Restore chain blocks ``idxs`` into ``slot``; returns the updated
+        cache. Device-to-device only."""
+        return _gather(cache, self.buffers,
+                       jnp.asarray(idxs, jnp.int32), jnp.int32(slot))
+
+    def scatter_from(self, cache, slot: int, block_positions: List[int],
+                     idxs: List[int]) -> None:
+        """Capture the blocks at chain positions ``block_positions`` of
+        ``slot``'s cache into pool rows ``idxs``. Device-to-device only."""
+        starts = jnp.asarray([p * self.block_tokens
+                              for p in block_positions], jnp.int32)
+        self.buffers = _scatter(cache, self.buffers,
+                                jnp.asarray(idxs, jnp.int32), starts,
+                                jnp.int32(slot))

@@ -34,15 +34,25 @@ Victim selection is O(log n) heap pops against incrementally-maintained
 counters; the retained brute-force oracle lives in ``serve.reference`` and
 the equivalence tests prove identical eviction decisions.
 
-Payloads are per-block KV arrays (host memory); the engine copies the hit
-chain into a device slot at admission, so a longer effective chain is
-exactly fewer prefill FLOPs (measured, not simulated).
+Payloads are opaque to the store. The pooled engine stores *indices into a
+device-resident KV block pool* (``serve.kv_pool``) so eviction is O(1)
+index-freeing with zero copies; the legacy host-payload engine stores
+per-block KV arrays. ``insert`` optionally takes a payload *factory*
+(called only for blocks that actually become resident, after room has
+been made), and ``evict_payload`` lets the pool reclaim a victim's block
+index the moment it is evicted.
+
+Skeleton GC: ``complete_request`` prunes chain nodes that are neither
+resident nor referenced by any pending request, removing their DAG blocks
+and counter entries — under sustained traffic the radix tree tracks the
+live working set instead of growing with request history.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 from ..core import (BlockMeta, CacheMetrics, DagState, EvictionIndex,
                     JobDAG, Policy, TaskSpec, make_policy)
@@ -71,6 +81,8 @@ class PrefixStore:
                  block_tokens: int = 16) -> None:
         self.capacity = capacity_bytes
         self.block_tokens = block_tokens
+        # called with a victim's payload on eviction (pool index reclaim)
+        self.evict_payload: Optional[Callable[[Any], None]] = None
         self.root = Node(key=(), parent=None, resident=True)
         self.used = 0
         self._uids = itertools.count(1)
@@ -141,12 +153,32 @@ class PrefixStore:
         return rid
 
     def complete_request(self, rid: int) -> None:
-        """Retire a request: its chain's references leave the counters and
-        its peer-group tasks are garbage-collected from the DAG."""
+        """Retire a request: its chain's references leave the counters, its
+        peer-group tasks are garbage-collected from the DAG, and chain
+        nodes left with no residency and no references are pruned."""
         for tid in self._req_tasks.pop(rid, []):
             self.state.on_task_removed(tid)
             self.dag.remove_task(tid, remove_output=True)
-        self._pending.pop(rid, None)
+        chain = self._pending.pop(rid, None)
+        if chain:
+            self._prune_chain(chain)
+
+    def _prune_chain(self, chain: List[Node]) -> None:
+        """Leaf→root GC of a retired chain: a node is garbage iff it is
+        non-resident, childless, and carries no pending references
+        (``ref_count == 0``). Depth-weighted counts are non-increasing with
+        depth and a kept child keeps its parent, so the first kept node
+        ends the walk."""
+        for node in reversed(chain):
+            if (node.resident or node.children
+                    or self.state.ref_count.get(node.block_id, 0) > 0):
+                break
+            node.parent.children.pop(node.key, None)
+            self._nodes.pop(node.block_id, None)
+            self.index.discard(node.block_id)
+            self.state.forget_block(node.block_id)
+            self.dag.remove_block(node.block_id)
+            node.parent = None
 
     # ---------------------------------------------------------------- reads
     def lookup(self, tokens: Sequence[int]) -> List[Node]:
@@ -177,18 +209,26 @@ class PrefixStore:
         return usable
 
     # --------------------------------------------------------------- writes
-    def insert(self, tokens: Sequence[int], payloads: List[Any],
+    def insert(self, tokens: Sequence[int],
+               payloads: Union[List[Any], Callable[[int, Node], Any]],
                nbytes_per_block: int) -> None:
         """Store KV payloads for the chain of ``tokens`` (post-prefill).
+        ``payloads`` is either one payload per chain position, or a factory
+        ``(position, node) -> payload`` invoked only for blocks that become
+        resident — *after* room has been made, so a pool-backed factory
+        allocates from indices the evictions just freed.
         Recency/insertion clocks are stamped leaf→root (see ``lookup``)."""
         chain = self._walk(tokens, create=True)
         exclude = {n.block_id for n in chain}
         fresh: List[Node] = []
-        for node, payload in zip(chain, payloads):
+        if not callable(payloads):
+            chain = chain[:len(payloads)]
+        for i, node in enumerate(chain):
             if node.resident:
                 continue
             self._make_room(nbytes_per_block, exclude=exclude)
-            node.payload = payload
+            node.payload = (payloads(i, node) if callable(payloads)
+                            else payloads[i])
             node.nbytes = nbytes_per_block
             node.resident = True
             self.used += nbytes_per_block
@@ -212,6 +252,8 @@ class PrefixStore:
 
     def _evict(self, node: Node) -> None:
         node.resident = False
+        if self.evict_payload is not None and node.payload is not None:
+            self.evict_payload(node.payload)
         node.payload = None
         self.used -= node.nbytes
         node.nbytes = 0

@@ -25,7 +25,7 @@ per-block insert/access, in chain order), so tiebreaks are identical.
 from __future__ import annotations
 
 import itertools
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Sequence, Tuple, Union
 
 from ..core import CacheMetrics
 from .prefix_store import Node, TokenBlock
@@ -80,7 +80,24 @@ class ReferencePrefixStore:
         return rid
 
     def complete_request(self, rid: int) -> None:
-        self._pending.pop(rid, None)
+        chain = self._pending.pop(rid, None)
+        if chain:
+            self._prune_chain(chain)
+
+    def _prune_chain(self, chain: List[Node]) -> None:
+        """Skeleton GC, brute-force form: a node is referenced iff it
+        appears in ANY pending chain (rc > 0 in the incremental store ⟺
+        membership here, since every position at or below contributes).
+        Must prune exactly the nodes ``PrefixStore`` prunes so that uid
+        assignment — and hence eviction logs — stay comparable."""
+        referenced = {n.block_id for c in self._pending.values() for n in c}
+        for node in reversed(chain):
+            if (node.resident or node.children
+                    or node.block_id in referenced):
+                break
+            node.parent.children.pop(node.key, None)
+            self._last_access.pop(node.block_id, None)
+            node.parent = None
 
     # ---------------------------------------------------------------- reads
     def lookup(self, tokens: Sequence[int]) -> List[Node]:
@@ -104,16 +121,20 @@ class ReferencePrefixStore:
         return usable
 
     # --------------------------------------------------------------- writes
-    def insert(self, tokens: Sequence[int], payloads: List[Any],
+    def insert(self, tokens: Sequence[int],
+               payloads: Union[List[Any], Callable[[int, Node], Any]],
                nbytes_per_block: int) -> None:
         chain = self._walk(tokens, create=True)
         exclude = {n.block_id for n in chain}
         fresh: List[Node] = []
-        for node, payload in zip(chain, payloads):
+        if not callable(payloads):
+            chain = chain[:len(payloads)]
+        for i, node in enumerate(chain):
             if node.resident:
                 continue
             self._make_room(nbytes_per_block, exclude=exclude)
-            node.payload = payload
+            node.payload = (payloads(i, node) if callable(payloads)
+                            else payloads[i])
             node.nbytes = nbytes_per_block
             node.resident = True
             self.used += nbytes_per_block

@@ -1,0 +1,223 @@
+"""End-to-end equivalence: the pooled/chunked engine vs the frozen legacy
+engine, and the pooled store vs the brute-force reference store.
+
+The PR 2 data plane changed *representation* (device pool indices instead
+of host arrays; chunked instead of token-at-a-time prefill) but must not
+change *semantics*: on a shared-prefix workload with uniform prompt and
+generation lengths (so the store-op interleaving is chunk-invariant),
+every ``prefill_chunk`` must produce token-identical generations and a
+bit-identical eviction log — and the pooled ``PrefixStore`` must agree
+with ``ReferencePrefixStore`` op-for-op while the engine drives it.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import init_params, model_spec
+from repro.serve import (LegacyServeEngine, PrefixStore,
+                         ReferencePrefixStore, ServeEngine)
+
+BT = 8          # block_tokens
+PROMPT = 32     # uniform prompt length (4 blocks)
+MAX_NEW = 4
+
+
+class ShadowStore:
+    """Forwards every store op to the pooled incremental store AND the
+    brute-force reference, asserting bit-identical behavior after each op.
+    The reference never sees payloads (it stays payload-agnostic)."""
+
+    def __init__(self, inc: PrefixStore, ref: ReferencePrefixStore):
+        self.inc, self.ref = inc, ref
+        self.block_tokens = inc.block_tokens
+        self.capacity = inc.capacity
+
+    # engine wires the pool's index reclaim through this attribute
+    @property
+    def evict_payload(self):
+        return self.inc.evict_payload
+
+    @evict_payload.setter
+    def evict_payload(self, fn):
+        self.inc.evict_payload = fn
+
+    def _check(self):
+        assert self.inc.eviction_log == self.ref.eviction_log
+
+    def register_request(self, tokens):
+        rid = self.inc.register_request(tokens)
+        assert rid == self.ref.register_request(tokens)
+        self._check()
+        return rid
+
+    def lookup(self, tokens):
+        a = self.inc.lookup(tokens)
+        b = self.ref.lookup(tokens)
+        assert [n.uid for n in a] == [n.uid for n in b]
+        self._check()
+        return a
+
+    def insert(self, tokens, payloads, nbytes_per_block):
+        self.inc.insert(tokens, payloads, nbytes_per_block)
+        self.ref.insert(tokens, lambda i, n: None, nbytes_per_block)
+        self._check()
+        # ERC counters: incremental vs from-scratch recomputation
+        rc, erc = self.ref._ref_counts()
+        for bid in self.inc._nodes:
+            assert self.inc.state.ref_count.get(bid, 0) == rc.get(bid, 0)
+            assert self.inc.state.eff_ref_count.get(bid, 0) == \
+                erc.get(bid, 0)
+
+    def complete_request(self, rid):
+        self.inc.complete_request(rid)
+        self.ref.complete_request(rid)
+        self._check()
+
+    def metrics(self):
+        m = self.inc.metrics()
+        assert m == self.ref.metrics()
+        return m
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get("qwen2_7b", smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=cfg.dtype)
+    return cfg, params
+
+
+def workload(vocab, n_requests=8, n_families=3, seed=7):
+    """Shared-prefix requests with uniform lengths."""
+    rng = np.random.default_rng(seed)
+    prefixes = [list(rng.integers(0, vocab, PROMPT - BT))
+                for _ in range(n_families)]
+    return [prefixes[i % n_families]
+            + list(rng.integers(0, vocab, BT)) for i in range(n_requests)]
+
+
+def capacity(cfg, params):
+    probe = ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                        store=PrefixStore(1 << 30, "lerc", block_tokens=BT),
+                        pool_blocks=1)
+    return probe._block_nbytes() * 10           # < working set -> evictions
+
+
+def test_pooled_chunked_engine_matches_legacy(model):
+    """Single slot: the store-op stream is strictly sequential (lookup →
+    insert → complete per request), so it is *provably* chunk-invariant —
+    generations AND eviction logs must be bit-identical across
+    prefill_chunk and vs the legacy engine."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    cap = capacity(cfg, params)
+
+    legacy = LegacyServeEngine(
+        cfg, params, max_slots=1, max_seq=64,
+        store=PrefixStore(cap, "lerc", block_tokens=BT))
+    lreqs = [legacy.submit(r, max_new=MAX_NEW) for r in reqs]
+    legacy.run()
+    assert legacy.store.evictions > 0, "workload produced no pressure"
+
+    for chunk in (1, 4, 8):
+        inc = PrefixStore(cap, "lerc", block_tokens=BT)
+        ref = ReferencePrefixStore(cap, "lerc", block_tokens=BT)
+        eng = ServeEngine(cfg, params, max_slots=1, max_seq=64,
+                          store=ShadowStore(inc, ref),
+                          prefill_chunk=chunk)
+        ereqs = [eng.submit(r, max_new=MAX_NEW) for r in reqs]
+        eng.run()
+
+        # token-identical generations vs the legacy hot path
+        assert [r.generated for r in ereqs] == \
+            [r.generated for r in lreqs], f"prefill_chunk={chunk}"
+        # identical eviction decisions vs the legacy engine's store...
+        assert inc.eviction_log == legacy.store.eviction_log, \
+            f"prefill_chunk={chunk}"
+        # ...and (asserted op-by-op above) vs the brute-force reference
+        assert inc.eviction_log == ref.eviction_log
+        # identical prefix reuse
+        assert [r.prefill_skipped for r in ereqs] == \
+            [r.prefill_skipped for r in lreqs]
+
+        # the hit/insert path never leaves the device: payloads are pool
+        # indices, not host arrays
+        for node in inc._nodes.values():
+            if node.resident:
+                assert isinstance(node.payload, int)
+
+        # chunked prefill does the same token work in ~P/chunk dispatches
+        assert eng.prefill_tokens == legacy.prefill_tokens
+        if chunk > 1:
+            assert eng.steps < legacy.steps
+
+
+def test_continuous_batching_matches_legacy(model):
+    """Multi-slot. At chunk=1 the engines are dispatch-for-dispatch
+    identical, so the full store trace must match. At chunk>1 the *timing*
+    of store ops across slots shifts (cold and warm prefills shrink by
+    different factors), so eviction decisions may legitimately differ —
+    but generations are KV-exact and must stay token-identical."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    cap = capacity(cfg, params)
+
+    legacy = LegacyServeEngine(
+        cfg, params, max_slots=2, max_seq=64,
+        store=PrefixStore(cap, "lerc", block_tokens=BT))
+    lreqs = [legacy.submit(r, max_new=MAX_NEW) for r in reqs]
+    legacy.run()
+
+    for chunk in (1, 8):
+        st = PrefixStore(cap, "lerc", block_tokens=BT)
+        eng = ServeEngine(cfg, params, max_slots=2, max_seq=64, store=st,
+                          prefill_chunk=chunk)
+        ereqs = [eng.submit(r, max_new=MAX_NEW) for r in reqs]
+        eng.run()
+        assert [r.generated for r in ereqs] == \
+            [r.generated for r in lreqs], f"prefill_chunk={chunk}"
+        if chunk == 1:
+            assert st.eviction_log == legacy.store.eviction_log
+            assert [r.prefill_skipped for r in ereqs] == \
+                [r.prefill_skipped for r in lreqs]
+            assert eng.steps == legacy.steps
+
+
+def test_prefill_step_count_scales_with_chunk(model):
+    """A P-token cold prompt must prefill in ceil(P/chunk) steps (>=4x
+    fewer at chunk=8 for P=32), not ~P."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    prompt = list(rng.integers(0, cfg.vocab, PROMPT))
+    steps = {}
+    for chunk in (1, 8):
+        eng = ServeEngine(cfg, params, max_slots=1, max_seq=64,
+                          store=PrefixStore(1 << 30, "lerc",
+                                            block_tokens=BT),
+                          prefill_chunk=chunk)
+        eng.submit(prompt, max_new=MAX_NEW)
+        eng.run()
+        # the final prefill dispatch also emits the first generated token,
+        # so decode adds MAX_NEW - 1 further dispatches
+        steps[chunk] = eng.steps - (MAX_NEW - 1)
+    assert steps[1] == PROMPT
+    assert steps[8] == -(-PROMPT // 8)
+    assert steps[1] >= 4 * steps[8]
+
+
+def test_pool_reclaims_evicted_blocks(model):
+    """Evictions free pool rows O(1); sustained traffic must not grow the
+    pool past the byte budget's block count."""
+    cfg, params = model
+    cap = capacity(cfg, params)
+    st = PrefixStore(cap, "lerc", block_tokens=BT)
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=64, store=st)
+    n_budget = cap // eng._block_nbytes()
+    for r in workload(cfg.vocab, n_requests=12, seed=11):
+        eng.submit(r, max_new=MAX_NEW)
+    eng.run()
+    assert st.evictions > 0
+    assert eng.pool.grows == 0
+    assert eng.pool.blocks_in_use <= n_budget
+    assert eng.pool.num_blocks <= n_budget + 1

@@ -135,8 +135,33 @@ def test_completed_requests_are_garbage_collected():
     assert len(st.dag.tasks) == n_tasks0
     assert not st.state.missing
     assert not st.state.done_tasks
-    # chain-node blocks survive (they may still be resident) but carry no
-    # references any more
-    for bid in st._nodes:
-        assert st.state.ref_count.get(bid, 0) == 0
-        assert st.state.eff_ref_count.get(bid, 0) == 0
+    # skeleton GC: nothing was ever resident, so the whole radix tree —
+    # nodes, DAG blocks, counter entries — is pruned with the requests
+    assert st._nodes == {}
+    assert st.root.children == {}
+    assert not st.state.ref_count and not st.state.eff_ref_count
+
+
+def test_skeleton_gc_respects_sharing_and_residency():
+    """complete_request prunes exactly the non-resident, reference-free
+    tail of a chain: shared prefixes survive while referenced, resident
+    blocks survive eviction pressure bookkeeping, and a fully retired
+    non-resident tree vanishes."""
+    st = PrefixStore(capacity_bytes=10_000, policy="lerc", block_tokens=2)
+    r1 = st.register_request(list(range(8)))              # 4 nodes
+    r2 = st.register_request(list(range(4)) + [9] * 4)    # shares 2, +2
+    assert len(st._nodes) == 6
+    st.complete_request(r1)
+    # r1's private tail (2 nodes) pruned; the shared prefix is still
+    # referenced by r2
+    assert len(st._nodes) == 4
+    st.complete_request(r2)
+    assert st._nodes == {} and st.root.children == {}
+    assert not st.dag.blocks and not st.dag.tasks
+
+    # resident chains survive their requests (they may serve future hits)
+    rid = st.register_request(list(range(6)))
+    st.insert(list(range(6)), [PAYLOAD] * 3, nbytes_per_block=10)
+    st.complete_request(rid)
+    assert len(st.lookup(list(range(6)))) == 3
+    assert len(st._nodes) == 3
