@@ -1,50 +1,85 @@
 """Distributed coordination of effective reference counts (paper §III-C).
 
+This module is the system's ONE coordination plane: both the cluster
+simulator (``sim.ClusterSim``, one ``PeerTracker`` + ``CacheManager`` per
+worker) and the sharded serving tier (``serve.ShardedFrontend``, one
+``PeerTracker`` per cache shard) run their cross-worker state through it.
+
 Architecture mirrors the paper's Spark implementation:
 
-* ``PeerTrackerMaster`` (driver): parses peer groups out of each submitted
-  job DAG and broadcasts the *peer-information profile* once per job.
-* ``PeerTracker`` (one per worker): holds a replica of the peer-group
-  completeness labels and the effective reference counts. On a *local*
-  eviction of a block that belongs to at least one **complete** peer group,
-  it reports to the master, which broadcasts the eviction to all workers.
-  Evictions of blocks in already-incomplete groups are silent.
+* ``PeerTrackerMaster`` (driver): holds the authoritative composed
+  ``JobDAG``/``DagState``, broadcasts the *peer-information profile* —
+  incrementally, only each job's new blocks and tasks — and relays both
+  channels below.
+* ``PeerTracker`` (one per worker/shard): owns a full ``JobDAG`` +
+  ``DagState`` replica updated *only* through bus messages (plus the local
+  events of its co-located cache manager), so tests can diff it against a
+  centrally-fed oracle.
+
+Two message channels, accounted separately:
+
+* **LERC channel** (the paper's overhead claim): ``peer_profile``
+  broadcasts at job submission, and ``evict_report`` (worker → master) +
+  ``evict_bcast`` (master → workers) when a *local* eviction breaks at
+  least one **complete** peer group. Evictions of blocks whose groups are
+  all already incomplete are silent on this channel. Counted in
+  ``MessageStats.{peer_profile_broadcasts,eviction_reports,
+  eviction_broadcasts,lerc_bytes}``.
+* **Legacy status channel** (exists regardless of LERC — Spark's
+  ``BlockManagerMaster`` block-status updates): every local block/task
+  event is reported worker → master (``status_report``), folded into the
+  master's authoritative state, and relayed to all workers (``status``) so
+  replicas stay coherent even across silent evictions. Counted only in
+  ``point_to_point``/``payload_bytes``, so the LERC-specific overhead is
+  measurable on its own.
 
 The paper's communication-overhead claim, implemented and property-tested
 here: **between two completeness transitions of a peer group, at most one
 eviction broadcast is triggered for that group** — once a group flips to
-incomplete, further evictions of its members cost no messages (until a
-reload makes it complete again).
-
-Block *materialization / load* status flows over the legacy Spark
-``BlockManagerMaster`` channel (it exists regardless of LERC); we count it
-separately in ``MessageStats.point_to_point`` so the LERC-specific
-overhead (eviction reports + broadcasts) is measurable on its own.
+incomplete, further evictions of its members cost no LERC messages (until
+a reload makes it complete again).
 """
 from __future__ import annotations
 
+import pickle
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .dag import BlockId, DagState, JobDAG, TaskId
 from .metrics import MessageStats
 
+# message kinds that belong to the LERC-specific channel (vs legacy status)
+LERC_KINDS = frozenset({"peer_profile", "evict_report", "evict_bcast"})
+
+
+def payload_nbytes(payload: tuple) -> int:
+    """Serialized wire size of a message payload. The in-process bus never
+    actually serializes; pickle gives an honest, deterministic estimate of
+    what an RPC transport would put on the wire."""
+    return len(pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL))
+
 
 @dataclass
 class Message:
-    kind: str            # "peer_profile" | "evict_report" | "evict_bcast" | "status"
+    kind: str        # "peer_profile" | "status_report" | "status"
+    #                  | "evict_report" | "evict_bcast"
     payload: tuple
     src: str
     dst: str
+    nbytes: Optional[int] = None   # filled by the bus (or precomputed once
+    #                                per broadcast) at send time
 
 
 class MessageBus:
     """Synchronous in-process bus with per-message accounting. A real
     deployment would replace this with RPC endpoints; the protocol logic
-    above it is identical."""
+    above it is identical. ``record_log`` keeps the full message log for
+    tests; long-running embedders (the simulator, the serve frontend) turn
+    it off so memory stays bounded."""
 
-    def __init__(self) -> None:
+    def __init__(self, record_log: bool = True) -> None:
         self.stats = MessageStats()
+        self.record_log = record_log
         self.log: List[Message] = []
         self._endpoints: Dict[str, Callable[[Message], None]] = {}
 
@@ -52,114 +87,195 @@ class MessageBus:
         self._endpoints[name] = handler
 
     def send(self, msg: Message) -> None:
-        self.log.append(msg)
+        if msg.nbytes is None:
+            msg.nbytes = payload_nbytes(msg.payload)
+        if self.record_log:
+            self.log.append(msg)
         self.stats.point_to_point += 1
+        self.stats.payload_bytes += msg.nbytes
+        if msg.kind in LERC_KINDS:
+            self.stats.lerc_bytes += msg.nbytes
         self._endpoints[msg.dst](msg)
 
 
-class PeerTracker:
-    """Worker-side tracker: replica of completeness labels + ERC counts.
+def apply_status(state: DagState, event: str, ident,
+                 eviction_log: Optional[List[BlockId]] = None) -> None:
+    """Fold one legacy-channel status event into ``state``. Handlers are
+    idempotent, so the worker that originated an event (and already applied
+    it locally) can safely receive the relayed broadcast."""
+    if event == "materialized":
+        state.on_materialized(ident, into_cache=True)
+    elif event == "materialized_disk":
+        state.on_materialized(ident, into_cache=False)
+    elif event == "loaded":
+        state.on_loaded(ident)
+    elif event == "evicted":
+        if eviction_log is not None and ident in state.cached:
+            eviction_log.append(ident)
+        state.on_evicted(ident)
+    elif event == "task_done":
+        state.on_task_done(ident)
+    elif event == "task_removed":
+        # serve: a request chain's references left the system; mirror the
+        # store's retirement (settle counters, drop the task + its virtual
+        # output) so replicas track the live working set, not history
+        if ident in state.dag.tasks:
+            state.on_task_removed(ident)
+            state.dag.remove_task(ident, remove_output=True)
+    elif event == "forget_block":
+        # serve: radix-skeleton GC of an unreferenced, non-resident node
+        if ident in state.dag.blocks:
+            state.forget_block(ident)
+            state.dag.remove_block(ident)
+    else:
+        raise ValueError(f"unknown status event {event!r}")
 
-    The replica maintains a full ``DagState`` updated *only* through bus
-    messages, so tests can diff it against a centrally-fed oracle.
+
+class PeerTracker:
+    """Worker-side tracker: a full replica of the composed DAG, the
+    peer-group completeness labels and the ERC counts.
+
+    The replica (``self.dag`` + ``self.state``) exists from construction,
+    so a co-located ``CacheManager``/``EvictionIndex`` can be built over it
+    before any job arrives; peer profiles then extend it incrementally
+    (``add_block``/``add_task`` + ``on_task_added`` — no rebuilds).
     """
 
     def __init__(self, worker_id: int, bus: MessageBus) -> None:
         self.worker_id = worker_id
         self.name = f"worker:{worker_id}"
         self.bus = bus
-        self.state: Optional[DagState] = None
+        self.dag = JobDAG()
+        self.state = DagState(self.dag)
+        # evictions applied to this replica *via bus messages*, in order
+        # (local evictions applied directly to a shared state by the
+        # co-located manager are deduplicated by residency). Follows the
+        # bus's record_log flag: long-running embedders that bound the
+        # message log also bound this, test clusters keep both.
+        self.record_eviction_log = bus.record_log
+        self.eviction_log: List[BlockId] = []
         bus.register(self.name, self.handle)
 
     # --------------------------------------------------------------- handler
     def handle(self, msg: Message) -> None:
         if msg.kind == "peer_profile":
-            (dag,) = msg.payload
-            if self.state is None:
-                self.state = DagState(dag)
-            else:
-                # incremental job arrival: rebuild over the composed DAG
-                self.state = DagState(
-                    dag,
-                    materialized=set(self.state.materialized),
-                    cached=set(self.state.cached),
-                    done_tasks=set(self.state.done_tasks),
-                )
+            blocks, tasks = msg.payload
+            for b in blocks:
+                if b.id not in self.dag.blocks:
+                    self.dag.add_block(b)
+            for t in tasks:
+                if t.id not in self.dag.tasks:
+                    self.dag.add_task(t)
+                    self.state.on_task_added(t.id)
         elif msg.kind == "status":
-            event, block = msg.payload
-            if event == "materialized":
-                self.state.on_materialized(block, into_cache=True)
-            elif event == "materialized_disk":
-                self.state.on_materialized(block, into_cache=False)
-            elif event == "loaded":
-                self.state.on_loaded(block)
-            elif event == "task_done":
-                self.state.on_task_done(block)
+            event, ident = msg.payload
+            apply_status(self.state, event, ident,
+                         eviction_log=(self.eviction_log
+                                       if self.record_eviction_log else None))
         elif msg.kind == "evict_bcast":
             (block,) = msg.payload
+            if self.record_eviction_log and block in self.state.cached:
+                self.eviction_log.append(block)
             self.state.on_evicted(block)
 
     # ----------------------------------------------------------- local event
     def local_eviction(self, block: BlockId) -> bool:
-        """Called by this worker's cache manager when it evicts ``block``.
+        """A local eviction not yet applied to the replica: apply it, then
+        run the full protocol — the paper's reporting rule on the LERC
+        channel plus the legacy status update (so the master and every
+        peer replica learn of silent evictions too). Returns True iff a
+        report (and hence a broadcast) was triggered."""
+        if self.record_eviction_log and block in self.state.cached:
+            self.eviction_log.append(block)
+        flipped = self.state.on_evicted(block)
+        reported = self.report_eviction(block, flipped)
+        self.report_status("evicted", block)
+        return reported
 
-        Returns True iff a report (and hence a broadcast) was triggered —
-        i.e. the block belonged to at least one complete peer group.
-        """
-        st = self.state
-        in_complete_group = any(
-            st.task_live(t) and st.group_complete(t)
-            for t in st.dag.consumers.get(block, []))
-        if not in_complete_group:
-            # silent: every group containing it is already incomplete
-            st.on_evicted(block)
+    def report_eviction(self, block: BlockId,
+                        flipped_groups: Sequence[TaskId]) -> bool:
+        """Paper §III-C worker-side rule, for callers whose cache manager
+        already applied the eviction to the local state: report to the
+        master iff the eviction broke at least one complete peer group
+        (``flipped_groups`` is ``DagState.on_evicted``'s return value).
+        Evictions out of already-incomplete groups are silent."""
+        if not flipped_groups:
             return False
         self.bus.stats.eviction_reports += 1
-        self.bus.send(Message("evict_report", (block, self.worker_id),
+        self.bus.send(Message("evict_report", (block,),
                               src=self.name, dst="master"))
         return True
 
+    def report_status(self, event: str, ident) -> None:
+        """Legacy BlockManagerMaster channel: one point-to-point message to
+        the master, which folds it into the authoritative state and relays
+        it to every worker."""
+        self.bus.send(Message("status_report", (event, ident),
+                              src=self.name, dst="master"))
+
 
 class PeerTrackerMaster:
-    """Driver-side: broadcasts peer profiles and relays eviction reports."""
+    """Driver-side: authoritative composed DAG + state, peer-profile
+    broadcasts, eviction-report relay, and the legacy status relay."""
 
     def __init__(self, bus: MessageBus, n_workers: int) -> None:
         self.bus = bus
         self.n_workers = n_workers
         self.dag = JobDAG()
+        self.state = DagState(self.dag)
         bus.register("master", self.handle)
 
     # ------------------------------------------------------------ job submit
-    def submit_job(self, job_dag: JobDAG) -> None:
-        """Merge the job's DAG into the composed multi-job DAG and broadcast
-        the peer profile (paper: via BlockManagerMasterEndpoint)."""
-        for b in job_dag.blocks.values():
-            if b.id not in self.dag.blocks:
-                self.dag.add_block(b)
-        for t in job_dag.tasks.values():
-            if t.id not in self.dag.tasks:
-                self.dag.add_task(t)
-        self.bus.stats.peer_profile_broadcasts += 1
-        self._broadcast("peer_profile", (self.dag,))
+    def submit_job(self, job_dag: JobDAG, broadcast: bool = True
+                   ) -> Tuple[List, List]:
+        """Merge the job's DAG into the composed multi-job DAG — applied
+        incrementally to the authoritative state — and broadcast the *new*
+        blocks and tasks as the peer-information profile (paper: via
+        BlockManagerMasterEndpoint). ``broadcast=False`` skips the LERC
+        profile (a cluster running a DAG-oblivious policy ships no peer
+        information). Returns (new_blocks, new_tasks)."""
+        new_blocks = [b for b in job_dag.blocks.values()
+                      if b.id not in self.dag.blocks]
+        new_tasks = [t for t in job_dag.tasks.values()
+                     if t.id not in self.dag.tasks]
+        for b in new_blocks:
+            self.dag.add_block(b)
+        for t in new_tasks:
+            self.dag.add_task(t)
+            self.state.on_task_added(t.id)
+        if broadcast:
+            self.bus.stats.peer_profile_broadcasts += 1
+            self._broadcast("peer_profile",
+                            (tuple(new_blocks), tuple(new_tasks)))
+        return new_blocks, new_tasks
 
     # ----------------------------------------------------------------- relay
     def handle(self, msg: Message) -> None:
         if msg.kind == "evict_report":
-            block, _src_worker = msg.payload
+            (block,) = msg.payload
             self.bus.stats.eviction_broadcasts += 1
             self._broadcast("evict_bcast", (block,))
+        elif msg.kind == "status_report":
+            event, ident = msg.payload
+            apply_status(self.state, event, ident)
+            self._broadcast("status", (event, ident))
 
     def status_update(self, event: str, block_or_task) -> None:
-        """Legacy BlockManagerMaster status channel (not LERC overhead)."""
+        """Driver-originated status (legacy channel): fold into the
+        authoritative state and broadcast to all workers."""
+        apply_status(self.state, event, block_or_task)
         self._broadcast("status", (event, block_or_task))
 
     def _broadcast(self, kind: str, payload: tuple) -> None:
+        nbytes = payload_nbytes(payload)
         for w in range(self.n_workers):
-            self.bus.send(Message(kind, payload, src="master", dst=f"worker:{w}"))
+            self.bus.send(Message(kind, payload, src="master",
+                                  dst=f"worker:{w}", nbytes=nbytes))
 
 
-def build_cluster(n_workers: int) -> Tuple[PeerTrackerMaster, List[PeerTracker], MessageBus]:
-    bus = MessageBus()
+def build_cluster(n_workers: int, record_log: bool = True
+                  ) -> Tuple[PeerTrackerMaster, List[PeerTracker], MessageBus]:
+    bus = MessageBus(record_log=record_log)
     workers = [PeerTracker(w, bus) for w in range(n_workers)]
     master = PeerTrackerMaster(bus, n_workers)
     return master, workers, bus

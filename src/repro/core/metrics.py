@@ -61,12 +61,23 @@ class CacheMetrics:
 
 @dataclass
 class MessageStats:
-    """Coordination-protocol traffic (paper §III-C)."""
+    """Coordination-protocol traffic (paper §III-C).
+
+    Counts are split into the LERC-specific channel (peer-profile
+    broadcasts + eviction reports/broadcasts — the paper's overhead claim)
+    and the legacy block-status channel that exists regardless of LERC
+    (Spark's BlockManagerMaster updates). ``point_to_point`` counts every
+    individual message on the wire across both channels; the byte counters
+    measure serialized payload sizes so overhead is reportable in bytes as
+    well as message counts.
+    """
 
     peer_profile_broadcasts: int = 0      # job submit: peer info -> workers
     eviction_reports: int = 0             # worker -> master
     eviction_broadcasts: int = 0          # master -> all workers
     point_to_point: int = 0               # individual messages on the wire
+    payload_bytes: int = 0                # serialized payload bytes, all msgs
+    lerc_bytes: int = 0                   # ...restricted to the LERC channel
 
     def as_dict(self) -> Dict[str, int]:
         return {
@@ -74,4 +85,6 @@ class MessageStats:
             "eviction_reports": self.eviction_reports,
             "eviction_broadcasts": self.eviction_broadcasts,
             "point_to_point": self.point_to_point,
+            "payload_bytes": self.payload_bytes,
+            "lerc_bytes": self.lerc_bytes,
         }

@@ -22,9 +22,19 @@ from .dag import BlockId, DagState
 
 
 class Policy(ABC):
-    """Ranks in-memory blocks for eviction. Lower key = evicted first."""
+    """Ranks in-memory blocks for eviction. Lower key = evicted first.
+
+    The coordination plane reads two protocol-level traits: ``uses_dag``
+    (the policy's key reads lineage reference counts, so workers need the
+    peer-information profile broadcast) and ``uses_completeness`` (the key
+    reads peer-group completeness labels, so workers additionally run the
+    paper's eviction report/broadcast protocol). DAG-oblivious policies
+    ship neither — that difference is the measured LERC overhead.
+    """
 
     name: str = "abstract"
+    uses_dag: bool = False
+    uses_completeness: bool = False
 
     def __init__(self) -> None:
         self._clock = 0
@@ -121,6 +131,7 @@ class LRC(Policy):
     unmaterialized dependents. Ties: random (paper §II-C) or LRU."""
 
     name = "lrc"
+    uses_dag = True
 
     def __init__(self, tiebreak: str = "lru", seed: int = 0) -> None:
         super().__init__()
@@ -146,6 +157,8 @@ class LERC(Policy):
     """
 
     name = "lerc"
+    uses_dag = True
+    uses_completeness = True
 
     def eviction_key(self, block: BlockId, state: DagState):
         return (state.eff_ref_count.get(block, 0),
@@ -162,6 +175,8 @@ class Sticky(Policy):
     """
 
     name = "sticky"
+    uses_dag = True
+    uses_completeness = True
 
     def eviction_key(self, block: BlockId, state: DagState):
         dag = state.dag

@@ -15,7 +15,7 @@ import numpy as np
 from .. import configs
 from ..core import POLICIES
 from ..models import init_params, model_spec
-from ..serve import PrefixStore, ServeEngine
+from ..serve import PrefixStore, ServeEngine, ShardedFrontend
 
 
 def serve_main(argv=None) -> int:
@@ -37,19 +37,31 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="device KV pool size in blocks "
                          "(default: sized to --cache-kb)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="cache shards: >1 runs a ShardedFrontend of "
+                         "independent engines on the coordination plane, "
+                         "splitting --cache-kb across shards")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, smoke=args.smoke)
     params = init_params(jax.random.key(args.seed), model_spec(cfg),
                          dtype=cfg.dtype)
-    store = PrefixStore(capacity_bytes=args.cache_kb * 1024,
-                        policy=args.policy,
-                        block_tokens=args.block_tokens)
-    eng = ServeEngine(cfg, params, max_slots=args.slots,
-                      max_seq=args.max_seq, store=store,
-                      prefill_chunk=args.prefill_chunk,
-                      pool_blocks=args.pool_blocks)
+    if args.shards > 1:
+        eng = ShardedFrontend(
+            cfg, params, args.shards, max_slots=args.slots,
+            max_seq=args.max_seq,
+            capacity_bytes=max(args.cache_kb * 1024 // args.shards, 1),
+            policy=args.policy, block_tokens=args.block_tokens,
+            prefill_chunk=args.prefill_chunk, pool_blocks=args.pool_blocks)
+    else:
+        store = PrefixStore(capacity_bytes=args.cache_kb * 1024,
+                            policy=args.policy,
+                            block_tokens=args.block_tokens)
+        eng = ServeEngine(cfg, params, max_slots=args.slots,
+                          max_seq=args.max_seq, store=store,
+                          prefill_chunk=args.prefill_chunk,
+                          pool_blocks=args.pool_blocks)
 
     rng = np.random.default_rng(args.seed)
     n_families = max(args.requests // 4, 1)
@@ -61,8 +73,11 @@ def serve_main(argv=None) -> int:
         sfx = list(rng.integers(0, cfg.vocab, 8))
         eng.submit(pfx + sfx, max_new=args.max_new)
     eng.run()
+    if args.shards > 1:
+        eng.verify_replicas()       # smoke doubles as a coherence proof
     m = eng.metrics()
-    print(f"policy={args.policy}  wall={time.time()-t0:.1f}s")
+    print(f"policy={args.policy}  shards={args.shards}  "
+          f"wall={time.time()-t0:.1f}s")
     for k, v in m.items():
         print(f"  {k:26s} {v:.3f}" if isinstance(v, float)
               else f"  {k:26s} {v}")

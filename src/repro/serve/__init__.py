@@ -9,6 +9,8 @@ from .kv_pool import KVBlockPool
 from .legacy import LegacyServeEngine
 from .prefix_store import Node, PrefixStore
 from .reference import ReferencePrefixStore
+from .sharded import ShardedFrontend, route_prefix
 
 __all__ = ["Request", "ServeEngine", "LegacyServeEngine", "KVBlockPool",
-           "Node", "PrefixStore", "ReferencePrefixStore"]
+           "Node", "PrefixStore", "ReferencePrefixStore", "ShardedFrontend",
+           "route_prefix"]

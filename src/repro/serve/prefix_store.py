@@ -83,6 +83,14 @@ class PrefixStore:
         self.block_tokens = block_tokens
         # called with a victim's payload on eviction (pool index reclaim)
         self.evict_payload: Optional[Callable[[Any], None]] = None
+        # coordination-plane hooks (serve.ShardedFrontend): every store
+        # event a peer replica must see, fired inline so the cross-shard
+        # event order is exactly the local one.
+        #   on_evict(block_id, flipped_groups)  — after each eviction
+        #   on_status(event, ident)             — "loaded" / "task_removed"
+        #                                         / "forget_block"
+        self.on_evict: Optional[Callable[[str, List[str]], None]] = None
+        self.on_status: Optional[Callable[[str, str], None]] = None
         self.root = Node(key=(), parent=None, resident=True)
         self.used = 0
         self._uids = itertools.count(1)
@@ -152,6 +160,15 @@ class PrefixStore:
         self._req_tasks[rid] = tids
         return rid
 
+    def request_profile(self, rid: int) -> Tuple[List[Node], List[TaskSpec]]:
+        """The peer-information profile of a registered request: its chain
+        nodes and the per-position peer-group tasks. This is what the
+        coordination plane broadcasts when the store is one shard of a
+        ``serve.ShardedFrontend``."""
+        chain = self._pending[rid]
+        tasks = [self.dag.tasks[tid] for tid in self._req_tasks[rid]]
+        return chain, tasks
+
     def complete_request(self, rid: int) -> None:
         """Retire a request: its chain's references leave the counters, its
         peer-group tasks are garbage-collected from the DAG, and chain
@@ -159,6 +176,8 @@ class PrefixStore:
         for tid in self._req_tasks.pop(rid, []):
             self.state.on_task_removed(tid)
             self.dag.remove_task(tid, remove_output=True)
+            if self.on_status is not None:
+                self.on_status("task_removed", tid)
         chain = self._pending.pop(rid, None)
         if chain:
             self._prune_chain(chain)
@@ -179,6 +198,8 @@ class PrefixStore:
             self.state.forget_block(node.block_id)
             self.dag.remove_block(node.block_id)
             node.parent = None
+            if self.on_status is not None:
+                self.on_status("forget_block", node.block_id)
 
     # ---------------------------------------------------------------- reads
     def lookup(self, tokens: Sequence[int]) -> List[Node]:
@@ -235,6 +256,8 @@ class PrefixStore:
             self.state.on_loaded(node.block_id)   # flips prefixes complete
             self.index.add(node.block_id)
             fresh.append(node)
+            if self.on_status is not None:
+                self.on_status("loaded", node.block_id)
         for node in reversed(fresh):              # leaf first, root last
             self.policy.on_insert(node.block_id)
 
@@ -263,7 +286,9 @@ class PrefixStore:
         self.policy.on_remove(node.block_id)
         # complete -> incomplete flips of every pending prefix through this
         # node propagate incrementally (the paper's broadcast moment)
-        self.state.on_evicted(node.block_id)
+        flipped = self.state.on_evicted(node.block_id)
+        if self.on_evict is not None:
+            self.on_evict(node.block_id, flipped)
 
     # -------------------------------------------------------------- metrics
     @property

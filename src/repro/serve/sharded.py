@@ -1,0 +1,197 @@
+"""Sharded multi-engine serve tier on the coordination plane.
+
+``ShardedFrontend`` hash-routes request prefixes across K independent
+``ServeEngine`` shards — each with its own ``PrefixStore`` + ``KVBlockPool``
+— and registers every shard as a worker on one ``core.MessageBus``:
+
+* **Routing** is by the request's first token block (``route_prefix``): a
+  deterministic digest, stable across process restarts, so a prefix family
+  always lands on the same shard (affinity) and its KV chain is reused
+  there. Prompts shorter than one block route on the whole prompt.
+* **Coordination**: each request's chain is announced to the
+  ``PeerTrackerMaster`` as a peer-information profile (chain nodes are
+  blocks, per-position prefixes are peer groups — namespaced ``s{k}:`` per
+  shard so one global DAG spans all shards); every store event (resident,
+  evicted, request retired, skeleton GC) flows over the bus, and evictions
+  that break a complete peer group run the paper's report/broadcast
+  protocol. Every shard therefore holds a live ERC replica of the WHOLE
+  tier: a chain resident across shards is just a peer group whose members
+  carry different namespaces, and cross-shard evictions keep all replicas
+  coherent (``verify_replicas`` proves it against each shard's own store
+  state).
+
+Generation is exact under sharding: greedy decoding with KV-exact prefix
+restore means K-shard output is token-identical to the single engine
+(``tests/test_sharded_serve.py`` proves shards ∈ {1,2,4} byte-equal).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core import (BlockMeta, CacheMetrics, JobDAG, MessageBus, PeerTracker,
+                    PeerTrackerMaster, TaskSpec)
+from .engine import Request, ServeEngine
+from .prefix_store import PrefixStore
+
+
+def route_prefix(tokens: Sequence[int], n_shards: int,
+                 block_tokens: int) -> int:
+    """Stable shard for a request: digest of its first token block.
+
+    Uses blake2b (unsalted, unlike Python's ``hash``) so the mapping is
+    identical across processes and restarts — the property that makes a
+    warm shard's prefix cache survive a frontend restart.
+    """
+    head = tuple(int(t) for t in tokens[:block_tokens])
+    digest = hashlib.blake2b(repr(head).encode(), digest_size=8).digest()
+    return int.from_bytes(digest, "big") % n_shards
+
+
+class ShardedFrontend:
+    """K ``ServeEngine`` shards behind one prefix-affinity router, all
+    registered as workers of one coordination plane."""
+
+    def __init__(self, cfg, params, n_shards: int = 2, *,
+                 max_slots: int = 4, max_seq: int = 256,
+                 capacity_bytes: int = 1 << 62, policy: str = "lerc",
+                 block_tokens: int = 16, eos_id: int = -1,
+                 prefill_chunk: int = 8,
+                 pool_blocks: Optional[int] = None,
+                 record_eviction_log: bool = False) -> None:
+        assert n_shards >= 1
+        self.n_shards = n_shards
+        self.block_tokens = block_tokens
+        self.bus = MessageBus(record_log=False)
+        self.trackers = [PeerTracker(k, self.bus) for k in range(n_shards)]
+        for tr in self.trackers:
+            # per-replica eviction logs are test/debug instrumentation;
+            # a long-lived frontend keeps them off so memory stays bounded
+            tr.record_eviction_log = record_eviction_log
+        self.master = PeerTrackerMaster(self.bus, n_shards)
+        self.shards: List[ServeEngine] = []
+        for k in range(n_shards):
+            store = PrefixStore(capacity_bytes, policy,
+                                block_tokens=block_tokens)
+            self._wire(k, store)
+            self.shards.append(ServeEngine(
+                cfg, params, max_slots=max_slots, max_seq=max_seq,
+                store=store, eos_id=eos_id, prefill_chunk=prefill_chunk,
+                pool_blocks=pool_blocks))
+
+    # ---------------------------------------------------------- coordination
+    def _ns(self, shard: int, ident: str) -> str:
+        """Namespace a shard-local block/task id into the global DAG."""
+        return f"s{shard}:{ident}"
+
+    def _wire(self, shard: int, store: PrefixStore) -> None:
+        tracker = self.trackers[shard]
+
+        def on_evict(block_id: str, flipped: List[str]) -> None:
+            # paper §III-C: report iff a complete peer group broke (the
+            # master broadcasts, updating every shard's labels); the
+            # eviction itself always rides the legacy status channel
+            tracker.report_eviction(self._ns(shard, block_id),
+                                    [self._ns(shard, t) for t in flipped])
+            tracker.report_status("evicted", self._ns(shard, block_id))
+
+        def on_status(event: str, ident: str) -> None:
+            tracker.report_status(event, self._ns(shard, ident))
+
+        store.on_evict = on_evict
+        store.on_status = on_status
+
+    def _announce(self, shard: int, store: PrefixStore, rid: int) -> None:
+        """Broadcast a registered request's peer profile: its (namespaced)
+        chain blocks + per-position peer-group tasks. The master dedupes
+        against the composed DAG, so shared prefixes are announced once;
+        newly created skeleton nodes are then reported materialized-on-disk
+        (recomputable by prefill, not resident) over the status channel."""
+        chain, tasks = store.request_profile(rid)
+        job = JobDAG()
+        for node in chain:
+            job.add_block(BlockMeta(id=self._ns(shard, node.block_id),
+                                    size=0, dataset=f"s{shard}:kv",
+                                    index=node.uid))
+        for i, t in enumerate(tasks):
+            job.add_block(BlockMeta(id=self._ns(shard, t.output), size=0,
+                                    dataset=f"s{shard}:req", index=i))
+            job.add_task(TaskSpec(
+                id=self._ns(shard, t.id),
+                inputs=tuple(self._ns(shard, b) for b in t.inputs),
+                output=self._ns(shard, t.output),
+                job=self._ns(shard, t.job)))
+        new_blocks, _ = self.master.submit_job(job)
+        chain_ids = {self._ns(shard, n.block_id) for n in chain}
+        for b in new_blocks:
+            if b.id in chain_ids:
+                self.trackers[shard].report_status("materialized_disk", b.id)
+
+    # --------------------------------------------------------------- serving
+    def shard_of(self, prompt: Sequence[int]) -> int:
+        return route_prefix(prompt, self.n_shards, self.block_tokens)
+
+    def submit(self, prompt: Sequence[int], max_new: int = 16
+               ) -> Tuple[int, Request]:
+        k = self.shard_of(prompt)
+        eng = self.shards[k]
+        req = eng.submit(prompt, max_new=max_new)
+        self._announce(k, eng.store, req.prefix_rid)
+        return k, req
+
+    def step(self) -> List[Request]:
+        finished: List[Request] = []
+        for eng in self.shards:
+            if eng.queue or any(s is not None for s in eng.slots):
+                finished.extend(eng.step())
+        return finished
+
+    def run(self, max_steps: int = 100_000) -> None:
+        """Round-robin the shards until every queue and slot drains."""
+        for _ in range(max_steps):
+            if not any(e.queue or any(s is not None for s in e.slots)
+                       for e in self.shards):
+                return
+            self.step()
+
+    # ------------------------------------------------------------ invariants
+    def verify_replicas(self) -> None:
+        """Every tracker's replica must agree with every shard's own store
+        state (the authority for its namespace): residency, reference
+        counts, effective reference counts. Proves the bus carried the
+        whole truth — the sharded tier's analogue of the sim's
+        ``ClusterSim.verify_replicas``."""
+        for k, eng in enumerate(self.shards):
+            st = eng.store.state
+            resident = {self._ns(k, b) for b in st.cached}
+            pfx = f"s{k}:"
+            for tr in self.trackers + [self.master]:
+                rs = tr.state
+                assert {b for b in rs.cached
+                        if b.startswith(pfx)} == resident, \
+                    f"{getattr(tr, 'name', 'master')}: shard {k} residency"
+                for bid in eng.store._nodes:
+                    nb = self._ns(k, bid)
+                    assert rs.ref_count.get(nb, 0) == \
+                        st.ref_count.get(bid, 0), f"ref[{nb}]"
+                    assert rs.eff_ref_count.get(nb, 0) == \
+                        st.eff_ref_count.get(bid, 0), f"eff[{nb}]"
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, float]:
+        cache = CacheMetrics()
+        for eng in self.shards:
+            cache = cache.merge(eng.store.metrics_obj)
+        out = cache.as_dict()
+        out["used_bytes"] = sum(e.store.used for e in self.shards)
+        for field in ("steps", "prefill_tokens", "prefill_tokens_skipped",
+                      "decoded_tokens"):
+            out[field if field != "steps" else "engine_steps"] = \
+                sum(getattr(e, field) for e in self.shards)
+        out["prefill_saved_frac"] = (
+            out["prefill_tokens_skipped"]
+            / max(out["prefill_tokens"] + out["prefill_tokens_skipped"], 1))
+        out["n_shards"] = self.n_shards
+        for key, val in self.bus.stats.as_dict().items():
+            out[f"msg_{key}"] = val
+        return out

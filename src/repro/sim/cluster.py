@@ -11,11 +11,14 @@ every warm one.
 
 The simulator drives the same ``CacheManager``/``DagState``/policy code that
 the real data pipeline uses; only time is simulated. Victim selection runs
-on each manager's ``EvictionIndex`` (O(log n) pops; job submission rebuilds
-the index keys via the DagState listener), so large sweeps no longer pay a
-full sort per eviction batch. Coordination messages are counted with the
-paper's protocol semantics (one broadcast per complete→incomplete flip of
-a peer group).
+on each manager's ``EvictionIndex`` (O(log n) pops) over that worker's OWN
+``DagState`` replica, held by its ``PeerTracker``: every piece of
+cross-worker state — peer profiles at job submission, materialize/load
+status, eviction broadcasts — flows through the shared ``MessageBus``, so
+``SimResult.messages`` is exactly what the coordination protocol actually
+sent (no hand-maintained counters anywhere in this module). Replicas are
+verified bit-identical to the driver's authoritative state (and to a
+from-scratch oracle) at the end of every ``run``.
 """
 from __future__ import annotations
 
@@ -25,7 +28,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core import (Belady, CacheManager, CacheMetrics, DagState, JobDAG,
-                    MessageStats, TaskSpec, make_policy)
+                    MessageBus, MessageStats, PeerTracker, PeerTrackerMaster,
+                    TaskSpec, make_policy)
 
 
 @dataclass
@@ -68,10 +72,15 @@ class ClusterSim:
                  cache_outputs: bool = True) -> None:
         self.n_workers = n_workers
         self.hw = hw
-        self.dag = JobDAG()
-        self.state = DagState(self.dag)
+        # the coordination plane: driver-side master (authoritative DAG +
+        # state) and one worker-side tracker per machine, each holding its
+        # own DagState replica fed only by bus messages
+        self.bus = MessageBus(record_log=False)
+        self.trackers = [PeerTracker(w, self.bus) for w in range(n_workers)]
+        self.master = PeerTrackerMaster(self.bus, n_workers)
+        self.dag = self.master.dag        # driver's view (scheduling)
+        self.state = self.master.state
         self.metrics = CacheMetrics()
-        self.messages = MessageStats()
         self.cache_outputs = cache_outputs
         self.policy_name = policy
         self._policies = []
@@ -80,8 +89,14 @@ class ClusterSim:
             pol = make_policy(policy, **(policy_kwargs or {}))
             self._policies.append(pol)
             self.managers.append(CacheManager(
-                capacity=hw.cache_bytes, policy=pol, state=self.state,
-                metrics=self.metrics, on_evict=self._on_evict))
+                capacity=hw.cache_bytes, policy=pol,
+                state=self.trackers[w].state, metrics=self.metrics,
+                on_evict=self._make_evict_hook(w)))
+        # protocol level is a cluster-wide deployment choice derived from
+        # the policy: DAG-oblivious policies ship no peer profiles, and
+        # only completeness-aware ones run the eviction report protocol
+        self._distribute_profiles = self._policies[0].uses_dag
+        self._coordinated = self._policies[0].uses_completeness
         self.home: Dict[str, int] = {}            # block -> worker
         self._outputs_not_cached: set = set()
         self._done: set = set()                   # executed tasks, across runs
@@ -89,30 +104,36 @@ class ClusterSim:
         # concurrent readers queue behind each other
         self._disk_free = [0.0] * n_workers
 
+    @property
+    def messages(self) -> MessageStats:
+        """All message accounting comes from actual bus traffic."""
+        return self.bus.stats
+
     # ------------------------------------------------------------- protocol
-    def _on_evict(self, block: str, flipped_groups: List[str]) -> None:
-        """Paper §III-C accounting: an eviction out of ≥1 complete peer
-        group costs one report + one broadcast; evictions out of
-        already-incomplete groups are silent."""
-        if flipped_groups:
-            self.messages.eviction_reports += 1
-            self.messages.eviction_broadcasts += 1
-            self.messages.point_to_point += 1 + self.n_workers
+    def _make_evict_hook(self, worker: int):
+        """The worker's cache manager applied an eviction to this worker's
+        replica; run the protocol: report to the master iff the eviction
+        broke a complete peer group (master then broadcasts, keeping every
+        other replica's labels current), and always ship the legacy
+        block-status update."""
+        def hook(block: str, flipped_groups: List[str]) -> None:
+            tracker = self.trackers[worker]
+            if self._coordinated:
+                tracker.report_eviction(block, flipped_groups)
+            tracker.report_status("evicted", block)
+        return hook
 
     # ------------------------------------------------------------ job intake
     def submit(self, job: JobDAG, output_not_cached: Sequence[str] = ()) -> None:
         for b in job.blocks.values():
             if b.id not in self.dag.blocks:
-                self.dag.add_block(b)
                 self.home[b.id] = (b.preferred_worker
                                    if b.preferred_worker is not None
                                    else len(self.home) % self.n_workers)
-        for t in job.tasks.values():
-            self.dag.add_task(t)
         self._outputs_not_cached.update(output_not_cached)
-        self.state.rebuild()
-        self.messages.peer_profile_broadcasts += 1
-        self.messages.point_to_point += self.n_workers
+        # merge into the authoritative DAG (incremental task arrival — no
+        # rebuild) and broadcast the delta as the peer profile
+        self.master.submit_job(job, broadcast=self._distribute_profiles)
 
     # ---------------------------------------------------------------- timing
     def _disk_io(self, worker: int, nbytes: int, clock: float) -> float:
@@ -226,16 +247,23 @@ class ClusterSim:
             task = self.dag.tasks[tid]
             done.add(tid)
             free_slots[worker] += 1
-            # materialize output at this worker
+            # materialize output at this worker: the owning manager applies
+            # the local event to its replica, then the worker reports it
+            # over the legacy status channel (master folds it into the
+            # authoritative state and relays to every other replica)
             out = task.output
             self.home.setdefault(out, worker)
+            home = self.home[out]
+            mgr = self.managers[home]
             if self.cache_outputs and out not in self._outputs_not_cached:
-                self.managers[self.home[out]].insert(
-                    out, self.dag.blocks[out].size)
+                mgr.insert(out, self.dag.blocks[out].size)
+                self.trackers[home].report_status(
+                    "materialized" if mgr.in_memory(out)
+                    else "materialized_disk", out)
             else:
-                self.managers[self.home[out]].disk.put(
-                    out, self.dag.blocks[out].size)
-                self.state.on_materialized(out, into_cache=False)
+                mgr.disk.put(out, self.dag.blocks[out].size)
+                mgr.state.on_materialized(out, into_cache=False)
+                self.trackers[home].report_status("materialized_disk", out)
             per_job_finish[task.job] = clock
             for cons in self.dag.consumers.get(out, []):
                 if cons not in unmet:
@@ -246,9 +274,41 @@ class ClusterSim:
                                 .append(self.dag.tasks[cons])
             try_schedule()
 
+        self.verify_replicas()
         return SimResult(makespan=clock, metrics=self.metrics,
                          messages=self.messages, per_job_finish=per_job_finish,
                          task_runtimes=task_runtimes)
+
+    # ------------------------------------------------------------ invariants
+    def verify_replicas(self) -> None:
+        """Every worker replica must agree with the driver's authoritative
+        state, and the driver's incremental counters with a from-scratch
+        rebuild (the paper's Definitions computed directly). Cheap —
+        O(blocks + tasks) — and run at the end of every ``run`` so the
+        whole sim test suite doubles as a coherence proof."""
+        ms = self.master.state
+        oracle = DagState(self.master.dag,
+                          materialized=set(ms.materialized),
+                          cached=set(ms.cached),
+                          done_tasks=set(ms.done_tasks))
+        blocks = self.master.dag.blocks
+        assert all(ms.ref_count.get(b, 0) == oracle.ref_count.get(b, 0)
+                   for b in blocks), "driver ref counts diverge from oracle"
+        assert all(ms.eff_ref_count.get(b, 0) == oracle.eff_ref_count.get(b, 0)
+                   for b in blocks), "driver eff counts diverge from oracle"
+        for tr in self.trackers:
+            st = tr.state
+            assert st.cached == ms.cached, f"{tr.name}: cached set diverged"
+            assert st.materialized == ms.materialized, \
+                f"{tr.name}: materialized set diverged"
+            if not self._distribute_profiles:
+                continue      # no peer profile -> replica has no DAG view
+            assert st.done_tasks == ms.done_tasks, \
+                f"{tr.name}: done tasks diverged"
+            assert all(st.ref_count.get(b, 0) == ms.ref_count.get(b, 0)
+                       for b in blocks), f"{tr.name}: ref counts diverged"
+            assert all(st.eff_ref_count.get(b, 0) == ms.eff_ref_count.get(b, 0)
+                       for b in blocks), f"{tr.name}: eff counts diverged"
 
     # ----------------------------------------------------------- task timing
     def _task_duration(self, task: TaskSpec, worker: int, clock: float) -> float:

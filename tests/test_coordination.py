@@ -1,0 +1,151 @@
+"""Unit tests for the coordination plane (core.coordination): incremental
+peer profiles, the two-channel accounting, silent-vs-reported evictions
+with re-arming reloads, and the sharded frontend's routing function."""
+import pytest
+
+from repro.core import (BlockMeta, DagState, JobDAG, TaskSpec, build_cluster)
+from repro.core.coordination import LERC_KINDS, payload_nbytes
+from repro.serve import route_prefix
+
+
+def _job(job_id, tasks):
+    """tasks: list of (task_name, inputs, output). Blocks auto-created."""
+    dag = JobDAG()
+    seen = set()
+    for i, (name, inputs, output) in enumerate(tasks):
+        for b in list(inputs) + [output]:
+            if b not in seen:
+                dag.add_block(BlockMeta(b, 1, job_id, len(seen)))
+                seen.add(b)
+        dag.add_task(TaskSpec(f"{job_id}.{name}", tuple(inputs), output,
+                              job=job_id))
+    return dag
+
+
+def test_peer_profile_is_incremental_delta():
+    """The second job's profile broadcast carries only its NEW blocks and
+    tasks; replicas extend their DAG incrementally (no rebuild) and agree
+    with a from-scratch oracle."""
+    master, workers, bus = build_cluster(n_workers=2)
+    job1 = _job("j1", [("t0", ["a", "b"], "x")])
+    job2 = _job("j2", [("t0", ["a", "x"], "y")])     # reuses j1's blocks
+    master.submit_job(job1)
+    master.submit_job(job2)
+
+    profiles = [m for m in bus.log if m.kind == "peer_profile"]
+    assert len(profiles) == 2 * 2                    # 2 jobs x 2 workers
+    blocks2, tasks2 = profiles[-1].payload
+    assert {b.id for b in blocks2} == {"y"}          # delta only
+    assert {t.id for t in tasks2} == {"j2.t0"}
+
+    oracle = DagState(master.dag)
+    for w in workers:
+        for b in master.dag.blocks:
+            assert w.state.ref_count.get(b, 0) == oracle.ref_count[b]
+            assert w.state.eff_ref_count.get(b, 0) == oracle.eff_ref_count[b]
+        assert set(w.dag.blocks) == set(master.dag.blocks)
+        assert set(w.dag.tasks) == set(master.dag.tasks)
+
+
+def test_replica_exists_before_any_job():
+    """A tracker owns an (empty) DAG + state from construction, so a cache
+    manager can be built over the replica before the first job arrives."""
+    _, workers, _ = build_cluster(n_workers=1)
+    assert workers[0].state.ref_count == {}
+    assert not workers[0].dag.blocks
+
+
+def test_bus_byte_accounting():
+    """payload_bytes sums every message's serialized payload; lerc_bytes
+    restricts to the LERC channel (profiles + eviction reports/bcasts)."""
+    master, workers, bus = build_cluster(n_workers=3)
+    master.submit_job(_job("j", [("t", ["a", "b"], "x")]))
+    for b in ("a", "b"):
+        workers[0].report_status("materialized", b)
+    workers[0].local_eviction("a")
+
+    assert bus.stats.payload_bytes == sum(m.nbytes for m in bus.log)
+    assert bus.stats.lerc_bytes == sum(m.nbytes for m in bus.log
+                                       if m.kind in LERC_KINDS)
+    assert 0 < bus.stats.lerc_bytes < bus.stats.payload_bytes
+    assert bus.stats.point_to_point == len(bus.log)
+    # the estimate is deterministic (it feeds reproducible benchmarks)
+    assert payload_nbytes(("evicted", "a")) == payload_nbytes(("evicted", "a"))
+
+
+def test_eviction_protocol_rearms_after_reload():
+    """§III-C re-arming: group complete -> evict peer (1 broadcast) ->
+    evict second peer (silent) -> reload both (complete again) -> evict
+    (1 broadcast). Exactly one broadcast per completeness flip."""
+    master, workers, bus = build_cluster(n_workers=2)
+    master.submit_job(_job("j", [("t", ["a", "b"], "x")]))
+    w0 = workers[0]
+
+    for b in ("a", "b"):
+        w0.report_status("materialized", b)
+    assert w0.local_eviction("a")              # complete -> flip
+    assert bus.stats.eviction_broadcasts == 1
+    assert not w0.local_eviction("b")          # already incomplete: silent
+    assert bus.stats.eviction_broadcasts == 1
+    for b in ("a", "b"):
+        w0.report_status("materialized", b)    # reload: complete again
+    assert w0.local_eviction("b")              # flip again
+    assert bus.stats.eviction_broadcasts == 2
+    assert bus.stats.eviction_reports == 2
+
+
+def test_status_relay_covers_silent_evictions():
+    """The legacy status channel must propagate evictions that are silent
+    on the LERC channel, or replicas mis-label groups after a reload:
+    evict c (flip), evict b (silent), reload c -> the group is STILL
+    incomplete (b is gone) and every replica must know it."""
+    master, workers, bus = build_cluster(n_workers=3)
+    master.submit_job(_job("j", [("t", ["b", "c"], "x")]))
+    w0 = workers[0]
+    for blk in ("b", "c"):
+        w0.report_status("materialized", blk)
+
+    w0.local_eviction("c")                     # flip: b,c group breaks
+    w0.local_eviction("b")                     # silent on the LERC channel
+    w0.report_status("materialized", "c")      # reload c only
+    oracle = DagState(master.dag, materialized={"b", "c"}, cached={"c"})
+    for w in workers:
+        for blk in master.dag.blocks:
+            assert w.state.eff_ref_count.get(blk, 0) == \
+                oracle.eff_ref_count[blk]
+        assert w.state.cached == {"c"}
+    assert bus.stats.eviction_broadcasts == 1
+
+
+# --------------------------------------------------------------------------
+# Sharded-frontend routing
+# --------------------------------------------------------------------------
+
+def test_route_prefix_is_stable_and_affine():
+    """Same prefix -> same shard, across calls and across (restarted)
+    processes: the digest is unsalted, so the mapping is a pure function
+    of the tokens. Requests sharing a first block co-locate."""
+    prompt = list(range(40))
+    for n_shards in (1, 2, 4, 7):
+        k = route_prefix(prompt, n_shards, 16)
+        assert 0 <= k < n_shards
+        assert route_prefix(prompt, n_shards, 16) == k
+        # suffix does not affect routing (prefix affinity)
+        assert route_prefix(prompt[:16] + [999, 123], n_shards, 16) == k
+    # pinned values guard the mapping against accidental change (a silent
+    # remap would cold-start every shard's cache on upgrade)
+    assert route_prefix(list(range(40)), 4, 16) == \
+        route_prefix(list(range(16)), 4, 16)
+
+
+def test_route_prefix_spreads_families():
+    """Distinct prefix families should not all collapse onto one shard."""
+    shards = {route_prefix([f, f + 1, f + 2], 4, 16) for f in range(64)}
+    assert len(shards) == 4
+
+
+def test_route_prefix_short_prompt():
+    """Prompts shorter than one block route on the whole prompt, still
+    deterministically."""
+    assert route_prefix([5], 3, 16) == route_prefix([5], 3, 16)
+    assert route_prefix([], 3, 16) == route_prefix([], 3, 16)

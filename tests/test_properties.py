@@ -88,38 +88,133 @@ def test_effective_refs_bounded_by_refs(dag):
         assert 0 <= state.eff_ref_count.get(b, 0) <= state.ref_count.get(b, 0)
 
 
-@settings(max_examples=50, deadline=None)
-@given(dag=st.composite(lambda draw: random_dag(draw))(),
-       events=event_strategy)
-def test_coordination_replicas_match_oracle(dag, events):
-    """Worker replicas driven only by bus messages must agree with a
-    centrally-maintained oracle, and a peer group triggers at most ONE
-    eviction broadcast per complete->incomplete transition (§III-C)."""
-    master, workers, bus = build_cluster(n_workers=3)
-    master.submit_job(dag)
-    oracle = DagState(dag)
-    blocks = sorted(dag.blocks)
-    in_mem = set()
+def random_jobs(draw):
+    """Multi-job workload over a shared source pool: job j may read any
+    block that exists when it arrives (sources or earlier jobs' outputs),
+    so peer groups span job boundaries — the composed-DAG case the
+    incremental peer-profile protocol must handle."""
+    n_src = draw(st.integers(3, 6))
+    sources = [BlockMeta(f"s[{i}]", draw(st.integers(1, 3)), "s", i)
+               for i in range(n_src)]
+    known = list(sources)
+    jobs = []
+    n_jobs = draw(st.integers(1, 3))
+    for j in range(n_jobs):
+        dag = JobDAG()
+        in_dag = set()
 
+        def need(block):
+            if block.id not in in_dag:
+                dag.add_block(block)
+                in_dag.add(block.id)
+
+        n_tasks = draw(st.integers(1, 4))
+        new_outputs = []
+        for t in range(n_tasks):
+            k = draw(st.integers(1, min(3, len(known))))
+            picks = draw(st.sets(st.integers(0, len(known) - 1),
+                                 min_size=k, max_size=k))
+            inputs = sorted(known[i].id for i in picks)
+            for i in picks:
+                need(known[i])
+            out = BlockMeta(f"o{j}_{t}", 1, f"o{j}", t)
+            need(out)
+            dag.add_task(TaskSpec(f"j{j}.t{t}", tuple(inputs), out.id,
+                                  job=f"j{j}"))
+            new_outputs.append(out)
+        known.extend(new_outputs)
+        jobs.append(dag)
+    return jobs
+
+
+multi_event_strategy = st.lists(
+    st.tuples(st.sampled_from(["submit", "insert", "evict", "load",
+                               "task_done"]),
+              st.integers(0, 30)),
+    min_size=0, max_size=40)
+
+
+@settings(max_examples=100, deadline=None)
+@given(jobs=st.composite(lambda draw: random_jobs(draw))(),
+       events=multi_event_strategy)
+def test_coordination_replicas_match_oracle(jobs, events):
+    """Under multi-job arrival interleaved with evictions and reloads,
+    every worker replica (and the master's incremental state) driven only
+    by bus messages must agree with a centrally-fed from-scratch oracle,
+    and a peer group triggers at most ONE eviction broadcast per
+    complete->incomplete transition (§III-C) — here checked in the exact
+    form: #broadcasts == #evictions that broke a complete group."""
+    master, workers, bus = build_cluster(n_workers=3)
+    truth = JobDAG()                       # test-side composed ground truth
+    pending_jobs = list(jobs)
+    # submit the first job up front so events have something to act on
+    first = pending_jobs.pop(0)
+    for job in [first]:
+        for blk in job.blocks.values():
+            if blk.id not in truth.blocks:
+                truth.add_block(blk)
+        for t in job.tasks.values():
+            truth.add_task(t)
+    master.submit_job(first)
+
+    in_mem, mat, done = set(), set(), set()
     transitions = 0          # complete -> incomplete flips (ground truth)
+
+    def ground_truth() -> DagState:
+        return DagState(truth, materialized=set(mat), cached=set(in_mem),
+                        done_tasks=set(done))
+
     for kind, idx in events:
+        if kind == "submit":
+            if pending_jobs:
+                job = pending_jobs.pop(0)
+                for blk in job.blocks.values():
+                    if blk.id not in truth.blocks:
+                        truth.add_block(blk)
+                for t in job.tasks.values():
+                    truth.add_task(t)
+                master.submit_job(job)
+            continue
+        blocks = sorted(truth.blocks)
         b = blocks[idx % len(blocks)]
         if kind in ("insert", "load"):
+            # "load" after an eviction is the reload that makes groups
+            # complete again (re-arming the broadcast protocol)
             if b not in in_mem:
                 in_mem.add(b)
-                oracle.on_materialized(b, into_cache=True)
-                master.status_update("materialized", b)
+                mat.add(b)
+                if b in truth.producer:
+                    done.add(truth.producer[b])
+                # the worker that materialized it reports over the legacy
+                # status channel; the master relays to every replica
+                workers[0].report_status("materialized", b)
         elif kind == "evict":
             if b in in_mem:
-                in_mem.discard(b)
-                flipped = oracle.on_evicted(b)
-                if flipped:
+                gt = ground_truth()
+                if any(gt.task_live(t) and gt.group_complete(t)
+                       for t in truth.consumers.get(b, [])):
                     transitions += 1
+                in_mem.discard(b)
+                # origin worker applies locally, then runs the full
+                # protocol (LERC report if a complete group broke, legacy
+                # status either way)
                 workers[0].local_eviction(b)
+        elif kind == "task_done":
+            tasks = sorted(truth.tasks)
+            if tasks:
+                t = tasks[idx % len(tasks)]
+                done.add(t)
+                master.status_update("task_done", t)
 
-    w = workers[1].state
-    assert w.ref_count == oracle.ref_count
-    assert w.eff_ref_count == oracle.eff_ref_count
+    oracle = ground_truth()
+    for st_ in [master.state] + [w.state for w in workers]:
+        assert st_.cached == oracle.cached
+        assert st_.materialized == oracle.materialized
+        assert st_.done_tasks == oracle.done_tasks
+        for b in truth.blocks:
+            assert st_.ref_count.get(b, 0) == oracle.ref_count.get(b, 0)
+            assert st_.eff_ref_count.get(b, 0) == \
+                oracle.eff_ref_count.get(b, 0)
     # protocol overhead: exactly one report+broadcast per flip
     assert bus.stats.eviction_reports == transitions
     assert bus.stats.eviction_broadcasts == transitions

@@ -1,0 +1,125 @@
+"""Sharded serve tier: K-shard generation must be token-identical to the
+single engine under prefix-affinity routing, and every shard's eviction
+log must match the coordination-plane replicas (the bus carried the whole
+truth about residency, references and effective references)."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import init_params, model_spec
+from repro.serve import PrefixStore, ServeEngine, ShardedFrontend
+
+BT = 8          # block_tokens
+PROMPT = 32     # uniform prompt length (4 blocks)
+MAX_NEW = 4
+SHARDS = (1, 2, 4)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get("qwen2_7b", smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=cfg.dtype)
+    return cfg, params
+
+
+def workload(vocab, n_requests=12, n_families=4, seed=7):
+    rng = np.random.default_rng(seed)
+    prefixes = [list(rng.integers(0, vocab, PROMPT - BT))
+                for _ in range(n_families)]
+    return [prefixes[i % n_families]
+            + list(rng.integers(0, vocab, BT)) for i in range(n_requests)]
+
+
+def capacity(cfg, params):
+    probe = ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                        store=PrefixStore(1 << 30, "lerc", block_tokens=BT),
+                        pool_blocks=1)
+    return probe._block_nbytes() * 10           # < working set -> evictions
+
+
+def _run_frontend(cfg, params, n_shards, reqs, per_shard_cap, **kwargs):
+    fe = ShardedFrontend(cfg, params, n_shards, max_slots=1, max_seq=64,
+                         capacity_bytes=per_shard_cap, policy="lerc",
+                         block_tokens=BT, **kwargs)
+    out = [fe.submit(r, max_new=MAX_NEW)[1] for r in reqs]
+    fe.run()
+    return fe, out
+
+
+def test_shards_token_identical(model):
+    """--shards {1,2,4} produce token-identical generations; at K=1 the
+    frontend is op-for-op the single engine (same eviction log and prefix
+    reuse), and every run leaves all replicas coherent."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    cap = capacity(cfg, params)
+
+    single = ServeEngine(cfg, params, max_slots=1, max_seq=64,
+                         store=PrefixStore(cap, "lerc", block_tokens=BT))
+    sreqs = [single.submit(r, max_new=MAX_NEW) for r in reqs]
+    single.run()
+    assert single.store.evictions > 0, "workload produced no pressure"
+
+    for n_shards in SHARDS:
+        fe, freqs = _run_frontend(cfg, params, n_shards, reqs, cap)
+        assert [r.generated for r in freqs] == \
+            [r.generated for r in sreqs], f"shards={n_shards}"
+        fe.verify_replicas()
+        if n_shards == 1:
+            assert fe.shards[0].store.eviction_log == \
+                single.store.eviction_log
+            assert [r.prefill_skipped for r in freqs] == \
+                [r.prefill_skipped for r in sreqs]
+
+
+def test_per_shard_eviction_logs_match_replicas(model):
+    """Each shard's store eviction log must appear, namespaced and in
+    order, in EVERY tracker's replica log — cross-shard evictions reached
+    every peer — and per-shard replica counters must be bit-identical to
+    the shard's own store state."""
+    cfg, params = model
+    reqs = workload(cfg.vocab, n_requests=16, seed=11)
+    # tight per-shard budget so every shard actually evicts
+    per_shard_cap = capacity(cfg, params) // 2
+    n_shards = 2
+    fe, _ = _run_frontend(cfg, params, n_shards, reqs, per_shard_cap,
+                          record_eviction_log=True)
+
+    total_evictions = 0
+    for k, eng in enumerate(fe.shards):
+        log = [f"s{k}:{b}" for b in eng.store.eviction_log]
+        total_evictions += len(log)
+        for tr in fe.trackers:
+            replica_view = [b for b in tr.eviction_log
+                            if b.startswith(f"s{k}:")]
+            assert replica_view == log, \
+                f"shard {k} log diverged in {tr.name}"
+    assert total_evictions > 0, "workload produced no pressure"
+
+    fe.verify_replicas()     # residency + rc/erc bit-identity per shard
+
+    # protocol shape: one broadcast per report, both bounded by evictions
+    s = fe.bus.stats
+    assert s.eviction_broadcasts == s.eviction_reports
+    assert s.eviction_broadcasts <= total_evictions
+    assert s.peer_profile_broadcasts == len(reqs)
+    assert s.lerc_bytes > 0 and s.payload_bytes > s.lerc_bytes
+
+
+def test_affinity_routing_preserves_prefix_reuse(model):
+    """Same-family requests land on one shard, so sharding must not lose
+    prefix-cache hits: with ample capacity, total skipped prefill tokens
+    equal the single engine's at every K."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    single = ServeEngine(cfg, params, max_slots=1, max_seq=64,
+                         store=PrefixStore(1 << 30, "lerc", block_tokens=BT))
+    for r in reqs:
+        single.submit(r, max_new=MAX_NEW)
+    single.run()
+    for n_shards in SHARDS:
+        fe, _ = _run_frontend(cfg, params, n_shards, reqs, 1 << 30)
+        assert sum(e.prefill_tokens_skipped for e in fe.shards) == \
+            single.prefill_tokens_skipped, f"shards={n_shards}"

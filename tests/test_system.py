@@ -45,6 +45,50 @@ def test_sim_message_accounting():
     assert res.messages.eviction_broadcasts == res.messages.eviction_reports
     # and broadcasts never exceed evictions
     assert res.messages.eviction_broadcasts <= res.metrics.evictions
+    # bytes accounting rides every message
+    assert res.messages.payload_bytes > res.messages.lerc_bytes > 0
+
+
+def test_message_stats_are_real_bus_traffic():
+    """Message counts come exclusively from MessageBus traffic: the stats
+    object IS the bus's, and a DAG-oblivious policy — which deploys no
+    coordination protocol — produces zero LERC-channel traffic while the
+    legacy status channel still flows."""
+    hw = HardwareModel(cache_bytes=int(2.0 * 2 ** 30) // 20, disk_bw=25e6)
+    sim = ClusterSim(20, hw, policy="lru")
+    assert sim.messages is sim.bus.stats
+    for dag, _ in multi_tenant_zip(n_jobs=2, n_blocks=20, n_workers=20):
+        sim.submit(dag)
+    sim.run(stages={0})
+    res = sim.run(stages={1})
+    assert res.messages.peer_profile_broadcasts == 0
+    assert res.messages.eviction_reports == 0
+    assert res.messages.eviction_broadcasts == 0
+    assert res.messages.lerc_bytes == 0
+    # ...but the legacy block-status channel is real traffic
+    assert res.messages.point_to_point > 0
+    assert res.messages.payload_bytes > 0
+
+
+def test_sim_replicas_bit_identical():
+    """Every worker's bus-fed DagState replica agrees with the driver's
+    authoritative state (run() verifies internally; assert it directly
+    too, after a run with heavy eviction traffic)."""
+    res = _run("lerc", cache_gb=1.0)
+    assert res.metrics.evictions > 0
+    hw = HardwareModel(cache_bytes=int(1.0 * 2 ** 30) // 20, disk_bw=25e6)
+    sim = ClusterSim(20, hw, policy="lerc")
+    for dag, _ in multi_tenant_zip(n_jobs=3, n_blocks=30, n_workers=20):
+        sim.submit(dag)
+    sim.run(stages={0})
+    sim.run(stages={1})
+    sim.verify_replicas()
+    ms = sim.master.state
+    for tr in sim.trackers:
+        assert tr.state.cached == ms.cached
+        for b in sim.master.dag.blocks:
+            assert tr.state.eff_ref_count.get(b, 0) == \
+                ms.eff_ref_count.get(b, 0)
 
 
 def test_belady_optimizes_the_wrong_metric():
