@@ -31,6 +31,7 @@ def main(argv=None) -> None:
                      ("eviction_scaling", "eviction_scaling"),
                      ("prefix_cache_bench", "prefix_cache"),
                      ("serve_throughput", "serve_throughput"),
+                     ("tiered_serve", "tiered_serve"),
                      ("coordination_overhead", "coordination_overhead"),
                      ("pipeline_bench", "pipeline"),
                      ("roofline", "roofline")):

@@ -1,0 +1,143 @@
+"""Tiered KV store: recompute vs promote on re-referenced evicted prefixes.
+
+The tentpole claim of the tiered serve path (PR 4): when device pressure
+pushes a prefix chain out of the fast tier, a host-memory tier turns the
+next reference from a full prefill recompute (~prefix/chunk model
+dispatches) into one host→device promotion copy. This benchmark warms K
+prefix families through a device pool too small to hold them, then
+re-references each family and measures time-to-first-token (TTFT) and
+prefill dispatches, sweeping the host-tier size; ``--host-cache-kb 0``
+(host_blocks=0) is the recompute baseline.
+
+Acceptance target: >=2x lower TTFT for re-referenced evicted prefixes
+with the host tier enabled vs disabled, at smoke scale.
+
+    PYTHONPATH=src python -m benchmarks.tiered_serve [--toy]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from .common import print_table, save_results
+
+BT = 8               # block_tokens
+SUFFIX = 8
+MAX_NEW = 4
+MAX_SEQ = 160
+CHUNK = 4            # prefill chunk: prefix recompute = ~PREFIX/CHUNK steps
+
+
+def _dev_blocks(prefix_tokens: int) -> int:
+    """Device tier sized to hold ~one family: warming the next family
+    forces the previous one out (demotion or death)."""
+    return (prefix_tokens + SUFFIX) // BT + 3
+
+
+def _families(vocab, n_families, prefix_tokens, seed=0):
+    rng = np.random.default_rng(seed)
+    prefixes = [list(rng.integers(0, vocab, prefix_tokens))
+                for _ in range(n_families)]
+    suffixes = [list(rng.integers(0, vocab, SUFFIX)) for _ in range(2)]
+    return prefixes, suffixes
+
+
+def _ttft(eng, prompt):
+    """Seconds from submit to the first generated token."""
+    req = eng.submit(prompt, max_new=MAX_NEW)
+    t0 = time.perf_counter()
+    while not req.generated:
+        eng.step()
+    dt = time.perf_counter() - t0
+    eng.run()                       # drain the tail decode steps
+    return dt
+
+
+def _run_cycle(cfg, params, blk, dev_blocks, host_blocks, prefixes,
+               suffixes) -> dict:
+    from repro.serve import ServeEngine, TieredKVStore
+
+    store = TieredKVStore(blk * dev_blocks, "lerc", block_tokens=BT,
+                          host_capacity_bytes=blk * host_blocks)
+    eng = ServeEngine(cfg, params, max_slots=1, max_seq=MAX_SEQ,
+                      store=store, prefill_chunk=CHUNK)
+    # warm every family once; later families demote (or evict) earlier ones
+    for pfx in prefixes:
+        eng.submit(pfx + suffixes[0], max_new=MAX_NEW)
+    eng.run()
+    # re-reference each family with a fresh suffix and time first token
+    steps0, skipped0 = eng.steps, eng.prefill_tokens_skipped
+    t0 = time.perf_counter()
+    ttfts = [_ttft(eng, pfx + suffixes[1]) for pfx in prefixes]
+    wall = time.perf_counter() - t0
+    m = eng.metrics()
+    return {
+        "host_blocks": host_blocks,
+        "ttft_ms": round(1e3 * sum(ttfts) / len(ttfts), 1),
+        "steps": eng.steps - steps0,
+        "prefill_skipped": eng.prefill_tokens_skipped - skipped0,
+        "demotions": m["demotions"],
+        "promotions": m["promotions"],
+        "host_evictions": m["host_evictions"],
+        "tokens_per_s": round(
+            (len(prefixes) * (len(prefixes[0]) + SUFFIX + MAX_NEW)) / wall,
+            1),
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--toy", action="store_true",
+                    help="CI scale: fewer families, shorter prefixes")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro import configs
+    from repro.models import init_params, model_spec
+    from repro.serve import PrefixStore, ServeEngine
+
+    cfg = configs.get("qwen2_7b", smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=cfg.dtype)
+    n_families = 2 if args.toy else 4
+    prefix_tokens = 48 if args.toy else 96
+    host_sizes = (0, 32) if args.toy else (0, 32, 64, 128)
+    prefixes, suffixes = _families(cfg.vocab, n_families, prefix_tokens)
+
+    probe = ServeEngine(cfg, params, max_slots=1, max_seq=MAX_SEQ,
+                        store=PrefixStore(1 << 30, "lerc", block_tokens=BT),
+                        pool_blocks=1)
+    blk = probe._block_nbytes()
+
+    # warm-up: compile every (chunk, transfer-size) specialization outside
+    # the measured window (jitted fns are shared per-config)
+    dev_blocks = _dev_blocks(prefix_tokens)
+    for hb in {0, host_sizes[-1]}:
+        _run_cycle(cfg, params, blk, dev_blocks, hb, prefixes, suffixes)
+
+    rows = []
+    for hb in host_sizes:
+        best = None
+        for _ in range(2):          # best-of-2: smoke-scale wall noise
+            r = _run_cycle(cfg, params, blk, dev_blocks, hb, prefixes,
+                           suffixes)
+            if best is None or r["ttft_ms"] < best["ttft_ms"]:
+                best = r
+        rows.append(best)
+    print_table("Tiered serve: recompute vs promote (re-referenced "
+                f"{prefix_tokens}-token prefixes, device={dev_blocks} blk)",
+                rows, ["host_blocks", "ttft_ms", "steps", "prefill_skipped",
+                       "demotions", "promotions", "host_evictions",
+                       "tokens_per_s"])
+    save_results("tiered_serve", rows)
+
+    base = rows[0]["ttft_ms"]
+    best = min(r["ttft_ms"] for r in rows[1:])
+    print(f"\npromote vs recompute TTFT: {base / best:.1f}x lower "
+          f"(target: >=2x at smoke scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -123,9 +123,11 @@ def apply_status(state: DagState, event: str, ident,
             state.on_task_removed(ident)
             state.dag.remove_task(ident, remove_output=True)
     elif event == "forget_block":
-        # serve: radix-skeleton GC of an unreferenced, non-resident node
+        # serve: radix-skeleton GC of an unreferenced, non-resident node.
+        # DAG-less replicas (the policy ships no peer profile) still drop
+        # the block from their residency sets so those stay bounded.
+        state.forget_block(ident)
         if ident in state.dag.blocks:
-            state.forget_block(ident)
             state.dag.remove_block(ident)
     else:
         raise ValueError(f"unknown status event {event!r}")

@@ -18,14 +18,28 @@ class CacheMetrics:
     evictions: int = 0
     disk_bytes_read: int = 0
     mem_bytes_read: int = 0
+    # ---- tiered stores (serve.TieredKVStore; core's mem/disk analogue) ----
+    # ``hits`` counts presence in ANY tier; ``tier1_hits`` is the slice of
+    # those served by the slow tier (a hit that pays a promotion copy, not
+    # a recompute). Effective hits are tier-0-only by Def. 1: the whole
+    # peer group must sit in the fast tier.
+    tier1_hits: int = 0
+    demotions: int = 0        # fast tier -> slow tier (block survives)
+    promotions: int = 0       # slow tier -> fast tier (chain reused)
+    host_evictions: int = 0   # out of the slow tier (block dies)
 
-    def record_access(self, hit: bool, effective: bool) -> None:
+    def record_access(self, hit: bool, effective: bool,
+                      tier: int = 0) -> None:
         self.accesses += 1
         if hit:
             self.hits += 1
+            if tier == 1:
+                self.tier1_hits += 1
         if effective:
             if not hit:
                 raise ValueError("an effective hit must be a hit")
+            if tier != 0:
+                raise ValueError("an effective hit must be a fast-tier hit")
             self.effective_hits += 1
 
     @property
@@ -44,6 +58,10 @@ class CacheMetrics:
             evictions=self.evictions + other.evictions,
             disk_bytes_read=self.disk_bytes_read + other.disk_bytes_read,
             mem_bytes_read=self.mem_bytes_read + other.mem_bytes_read,
+            tier1_hits=self.tier1_hits + other.tier1_hits,
+            demotions=self.demotions + other.demotions,
+            promotions=self.promotions + other.promotions,
+            host_evictions=self.host_evictions + other.host_evictions,
         )
 
     def as_dict(self) -> Dict[str, float]:
@@ -56,6 +74,10 @@ class CacheMetrics:
             "effective_hit_ratio": self.effective_hit_ratio,
             "disk_bytes_read": self.disk_bytes_read,
             "mem_bytes_read": self.mem_bytes_read,
+            "tier1_hits": self.tier1_hits,
+            "demotions": self.demotions,
+            "promotions": self.promotions,
+            "host_evictions": self.host_evictions,
         }
 
 

@@ -15,7 +15,7 @@ import numpy as np
 from .. import configs
 from ..core import POLICIES
 from ..models import init_params, model_spec
-from ..serve import PrefixStore, ServeEngine, ShardedFrontend
+from ..serve import PrefixStore, ServeEngine, ShardedFrontend, TieredKVStore
 
 
 def serve_main(argv=None) -> int:
@@ -37,6 +37,11 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="device KV pool size in blocks "
                          "(default: sized to --cache-kb)")
+    ap.add_argument("--host-cache-kb", type=int, default=0,
+                    help="host-memory KV tier per engine: device-pressure "
+                         "evictions demote blocks here and prefix hits "
+                         "promote them back instead of recomputing "
+                         "(0 disables the tier; split across --shards)")
     ap.add_argument("--shards", type=int, default=1,
                     help="cache shards: >1 runs a ShardedFrontend of "
                          "independent engines on the coordination plane, "
@@ -47,21 +52,40 @@ def serve_main(argv=None) -> int:
     cfg = configs.get(args.arch, smoke=args.smoke)
     params = init_params(jax.random.key(args.seed), model_spec(cfg),
                          dtype=cfg.dtype)
+    host_bytes = args.host_cache_kb * 1024
     if args.shards > 1:
         eng = ShardedFrontend(
             cfg, params, args.shards, max_slots=args.slots,
             max_seq=args.max_seq,
             capacity_bytes=max(args.cache_kb * 1024 // args.shards, 1),
             policy=args.policy, block_tokens=args.block_tokens,
-            prefill_chunk=args.prefill_chunk, pool_blocks=args.pool_blocks)
+            prefill_chunk=args.prefill_chunk, pool_blocks=args.pool_blocks,
+            host_capacity_bytes=host_bytes // args.shards)
     else:
-        store = PrefixStore(capacity_bytes=args.cache_kb * 1024,
-                            policy=args.policy,
-                            block_tokens=args.block_tokens)
+        if host_bytes > 0:
+            store: PrefixStore = TieredKVStore(
+                capacity_bytes=args.cache_kb * 1024, policy=args.policy,
+                block_tokens=args.block_tokens,
+                host_capacity_bytes=host_bytes)
+        else:
+            store = PrefixStore(capacity_bytes=args.cache_kb * 1024,
+                                policy=args.policy,
+                                block_tokens=args.block_tokens)
         eng = ServeEngine(cfg, params, max_slots=args.slots,
                           max_seq=args.max_seq, store=store,
                           prefill_chunk=args.prefill_chunk,
                           pool_blocks=args.pool_blocks)
+
+    if host_bytes > 0:
+        # a host budget below one KV block (per shard) sizes the pool to
+        # zero rows, silently disabling the tier — say so up front
+        engines = eng.shards if args.shards > 1 else [eng]
+        if any(getattr(e.store, "host_pool", None) is None
+               or e.store.host_pool.num_blocks == 0 for e in engines):
+            print(f"warning: --host-cache-kb {args.host_cache_kb} is below "
+                  f"one KV block per {'shard' if args.shards > 1 else 'engine'}"
+                  f" ({engines[0].pool.block_nbytes} B); host tier disabled",
+                  file=sys.stderr)
 
     rng = np.random.default_rng(args.seed)
     n_families = max(args.requests // 4, 1)
@@ -77,7 +101,7 @@ def serve_main(argv=None) -> int:
         eng.verify_replicas()       # smoke doubles as a coherence proof
     m = eng.metrics()
     print(f"policy={args.policy}  shards={args.shards}  "
-          f"wall={time.time()-t0:.1f}s")
+          f"host_cache_kb={args.host_cache_kb}  wall={time.time()-t0:.1f}s")
     for k, v in m.items():
         print(f"  {k:26s} {v:.3f}" if isinstance(v, float)
               else f"  {k:26s} {v}")

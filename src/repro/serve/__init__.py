@@ -1,16 +1,21 @@
 """repro.serve — continuous-batching engine (chunked prefill, paged
 device-resident KV pool) over a DAG-aware radix prefix cache (the paper's
 all-or-nothing property on KV block chains), sharing the core eviction
-substrate (DagState counters + EvictionIndex). ``LegacyServeEngine`` and
+substrate (DagState counters + EvictionIndex). ``TieredKVStore`` +
+``HostBlockPool`` add core's two-tier semantics to the data plane:
+device-pressure victims demote to a host-memory tier and promote back on
+reuse instead of being recomputed. ``LegacyServeEngine`` and
 ``ReferencePrefixStore`` are the frozen pre-optimization baselines the
 equivalence tests and benchmarks measure against."""
 from .engine import Request, ServeEngine
+from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool
 from .legacy import LegacyServeEngine
 from .prefix_store import Node, PrefixStore
 from .reference import ReferencePrefixStore
 from .sharded import ShardedFrontend, route_prefix
+from .tiered import TieredKVStore
 
 __all__ = ["Request", "ServeEngine", "LegacyServeEngine", "KVBlockPool",
-           "Node", "PrefixStore", "ReferencePrefixStore", "ShardedFrontend",
-           "route_prefix"]
+           "HostBlockPool", "Node", "PrefixStore", "ReferencePrefixStore",
+           "ShardedFrontend", "TieredKVStore", "route_prefix"]

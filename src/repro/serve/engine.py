@@ -42,8 +42,10 @@ import numpy as np
 
 from ..models import decode_step, init_decode_cache
 from ..models.common import ModelConfig
+from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool, chain_block_nbytes
 from .prefix_store import PrefixStore
+from .tiered import TieredKVStore
 
 # pool rows a default-constructed engine starts with when the store's byte
 # budget is effectively unbounded (the pool doubles on demand)
@@ -124,7 +126,16 @@ class ServeEngine:
             by_capacity = -(-self.store.capacity // max(blk_bytes, 1))
             pool_blocks = int(min(by_capacity, _DEFAULT_POOL_BLOCKS))
         self.pool = KVBlockPool(self.cache, bt, pool_blocks)
-        self.store.evict_payload = self.pool.free
+        if isinstance(self.store, TieredKVStore):
+            # tier 1: host-side pool sized to the store's host byte budget
+            # (0 rows when the tier is disabled — the store then behaves
+            # op-for-op like a plain PrefixStore)
+            self.store.attach_pools(
+                self.pool,
+                HostBlockPool.for_device_pool(self.cache, self.pool,
+                                              self.store.host_capacity))
+        else:
+            self.store.evict_payload = self.pool.free
 
         self._step_fn = _step_fn(cfg)
         self._rid = itertools.count(1)
@@ -254,8 +265,17 @@ class ServeEngine:
             "decoded_tokens": self.decoded_tokens,
             "pool_blocks": self.pool.num_blocks,
             "pool_blocks_in_use": self.pool.blocks_in_use,
+            "pool_high_water": self.pool.high_water,
             "prefill_saved_frac": (
                 self.prefill_tokens_skipped
                 / max(self.prefill_tokens + self.prefill_tokens_skipped, 1)),
         })
+        if isinstance(self.store, TieredKVStore) \
+                and self.store.host_pool is not None:
+            hp = self.store.host_pool
+            m.update({
+                "host_blocks": hp.num_blocks,
+                "host_blocks_in_use": hp.blocks_in_use,
+                "host_high_water": hp.high_water,
+            })
         return m

@@ -1,0 +1,81 @@
+"""Host-memory KV block pool — tier 1 of the serving data plane.
+
+Mirrors ``serve.kv_pool.KVBlockPool`` on the host side: one preallocated
+numpy buffer per KV cache leaf, shaped ``(num_blocks, *lead, block_tokens,
+KV, D)``, plus a free list of row indices. A demoted prefix-cache block
+occupies ONE row across every leaf, so the tiered store's payloads stay
+single ints in both tiers.
+
+Unlike the device pool this tier never grows: its size is the operator's
+``--host-cache-kb`` budget, and the tiered store's second eviction index
+frees rows before the byte budget is exceeded (blocks are uniform-size, so
+byte-room implies row-room). Buffers are ordinary preallocated numpy
+arrays — on CUDA-class runtimes they would be page-locked (pinned) host
+allocations; the allocation pattern (preallocate once, reuse rows) is what
+keeps demotion/promotion copies from churning the allocator either way.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from .kv_pool import KVBlockPool, _pool_leaf_shape
+
+
+class HostBlockPool:
+    """Preallocated host-side paged block pool over an engine's KV cache
+    pytree. Rows are exchanged with a ``KVBlockPool`` via its
+    ``read_rows``/``write_rows`` stacked-block format."""
+
+    def __init__(self, cache_template, block_tokens: int,
+                 num_blocks: int) -> None:
+        self.block_tokens = block_tokens
+        self.num_blocks = max(int(num_blocks), 0)
+        self.buffers = jax.tree.map(
+            lambda leaf: np.zeros(
+                _pool_leaf_shape(leaf.shape, self.num_blocks, block_tokens),
+                leaf.dtype),
+            cache_template)
+        self.free_list: List[int] = list(range(self.num_blocks - 1, -1, -1))
+        self.high_water = 0           # max rows ever simultaneously in use
+
+    @classmethod
+    def for_device_pool(cls, cache_template, device_pool: KVBlockPool,
+                        capacity_bytes: int) -> "HostBlockPool":
+        """Size a host pool to a byte budget, in whole blocks of the same
+        shape as ``device_pool``'s rows."""
+        num = capacity_bytes // max(device_pool.block_nbytes, 1)
+        return cls(cache_template, device_pool.block_tokens, num)
+
+    # -------------------------------------------------------------- indices
+    def alloc(self) -> int:
+        idx = self.free_list.pop()      # tiered store guarantees room
+        self.high_water = max(self.high_water, self.blocks_in_use)
+        return idx
+
+    def free(self, idx: int) -> None:
+        self.free_list.append(int(idx))
+
+    @property
+    def blocks_in_use(self) -> int:
+        return self.num_blocks - len(self.free_list)
+
+    # ------------------------------------------------------------ transfers
+    def read_rows(self, idxs: List[int]):
+        """Stacked per-leaf copies of rows ``idxs`` (numpy fancy indexing
+        copies) — the host half of a promotion; feed the result to
+        ``KVBlockPool.write_rows``."""
+        sel = np.asarray(idxs, np.int64)
+        return jax.tree.map(lambda hbuf: hbuf[sel], self.buffers)
+
+    def write_rows(self, idxs: List[int], host_blocks) -> None:
+        """Store stacked per-leaf block arrays (``KVBlockPool.read_rows``
+        output) into rows ``idxs`` — the host half of a demotion."""
+        sel = np.asarray(idxs, np.int64)
+
+        def put(hbuf, blk):
+            hbuf[sel] = np.asarray(blk, dtype=hbuf.dtype)
+
+        jax.tree.map(put, self.buffers, host_blocks)

@@ -62,6 +62,22 @@ def _gather(cache, pool, idxs, slot):
 
 
 @jax.jit
+def _read_rows(pool, idxs):
+    """Gather pool rows ``idxs`` into one stacked array per leaf — the
+    on-device half of a demotion (the host copy is a single device_get)."""
+    return jax.tree.map(lambda pbuf: pbuf[idxs], pool)
+
+
+@jax.jit
+def _write_rows(pool, blocks, idxs):
+    """Scatter stacked per-leaf block arrays into pool rows ``idxs`` — the
+    on-device half of a promotion (host arrays cross in the jit call)."""
+    return jax.tree.map(
+        lambda pbuf, blk: pbuf.at[idxs].set(blk.astype(pbuf.dtype)),
+        pool, blocks)
+
+
+@jax.jit
 def _scatter(cache, pool, idxs, starts, slot):
     """Read blocks at token offsets ``starts`` from ``slot``'s cache rows
     into pool rows ``idxs`` (fresh blocks need not be contiguous: resident
@@ -97,12 +113,15 @@ class KVBlockPool:
         self.free_list: List[int] = list(range(self.num_blocks - 1, -1, -1))
         self.block_nbytes = chain_block_nbytes(cache_template, block_tokens)
         self.grows = 0
+        self.high_water = 0           # max rows ever simultaneously in use
 
     # -------------------------------------------------------------- indices
     def alloc(self) -> int:
         if not self.free_list:
             self._grow()
-        return self.free_list.pop()
+        idx = self.free_list.pop()
+        self.high_water = max(self.high_water, self.blocks_in_use)
+        return idx
 
     def free(self, idx: Any) -> None:
         self.free_list.append(int(idx))
@@ -139,3 +158,22 @@ class KVBlockPool:
         self.buffers = _scatter(cache, self.buffers,
                                 jnp.asarray(idxs, jnp.int32), starts,
                                 jnp.int32(slot))
+
+    # -------------------------------------------- host-tier transfers (PR 4)
+    # Like gather/scatter above, both directions shape-specialize on the
+    # number of rows moved: demotion batches are bounded by the victims of
+    # one _make_room call and promotion batches by max_seq / block_tokens,
+    # so the trace cache stays small.
+    def read_rows(self, idxs: List[int]):
+        """Copy pool rows ``idxs`` to host memory: one jitted gather per
+        leaf, then a single device_get of the stacked result. Returns a
+        pytree of numpy arrays shaped ``(len(idxs), *lead, bt, KV, D)``."""
+        return jax.device_get(
+            _read_rows(self.buffers, jnp.asarray(idxs, jnp.int32)))
+
+    def write_rows(self, idxs: List[int], host_blocks) -> None:
+        """Scatter host-side stacked block arrays (the pytree shape
+        ``read_rows`` returns) into pool rows ``idxs``. The host→device
+        transfer happens inside the jit call."""
+        self.buffers = _write_rows(self.buffers, host_blocks,
+                                   jnp.asarray(idxs, jnp.int32))

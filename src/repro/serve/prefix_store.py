@@ -66,7 +66,10 @@ class Node:
     parent: Optional["Node"]
     payload: Any = None                  # per-layer KV arrays (host)
     nbytes: int = 0
-    resident: bool = False
+    resident: bool = False               # in the FAST tier (device pool)
+    # slow-tier payload (serve.TieredKVStore: a HostBlockPool row). Always
+    # None in a plain single-tier store; a node holds at most one tier.
+    host_payload: Any = None
     children: Dict[TokenBlock, "Node"] = field(default_factory=dict)
     uid: int = 0
 
@@ -189,17 +192,29 @@ class PrefixStore:
         depth and a kept child keeps its parent, so the first kept node
         ends the walk."""
         for node in reversed(chain):
-            if (node.resident or node.children
-                    or self.state.ref_count.get(node.block_id, 0) > 0):
+            if not self._is_garbage(node):
                 break
-            node.parent.children.pop(node.key, None)
-            self._nodes.pop(node.block_id, None)
-            self.index.discard(node.block_id)
-            self.state.forget_block(node.block_id)
-            self.dag.remove_block(node.block_id)
-            node.parent = None
-            if self.on_status is not None:
-                self.on_status("forget_block", node.block_id)
+            self._forget_node(node)
+
+    def _is_garbage(self, node: Node) -> bool:
+        """A skeleton node with nothing keeping it alive: not resident in
+        any tier, childless, and free of pending references."""
+        return (not node.resident and node.host_payload is None
+                and not node.children
+                and self.state.ref_count.get(node.block_id, 0) == 0)
+
+    def _forget_node(self, node: Node) -> None:
+        """Drop one garbage skeleton node (non-resident, childless,
+        unreferenced): unlink it, erase its DAG block + counters, and
+        announce the GC on the status channel."""
+        node.parent.children.pop(node.key, None)
+        self._nodes.pop(node.block_id, None)
+        self.index.discard(node.block_id)
+        self.state.forget_block(node.block_id)
+        self.dag.remove_block(node.block_id)
+        node.parent = None
+        if self.on_status is not None:
+            self.on_status("forget_block", node.block_id)
 
     # ---------------------------------------------------------------- reads
     def lookup(self, tokens: Sequence[int]) -> List[Node]:
@@ -247,6 +262,7 @@ class PrefixStore:
         for i, node in enumerate(chain):
             if node.resident:
                 continue
+            self._pre_insert(node)
             self._make_room(nbytes_per_block, exclude=exclude)
             node.payload = (payloads(i, node) if callable(payloads)
                             else payloads[i])
@@ -260,6 +276,10 @@ class PrefixStore:
                 self.on_status("loaded", node.block_id)
         for node in reversed(fresh):              # leaf first, root last
             self.policy.on_insert(node.block_id)
+
+    def _pre_insert(self, node: Node) -> None:
+        """Hook: ``node`` (non-resident) is about to be (re)inserted.
+        Tiered stores release a superseded slow-tier copy here."""
 
     # ------------------------------------------------------------- eviction
     def _make_room(self, needed: int, exclude: set) -> None:

@@ -14,7 +14,11 @@
   shard so one global DAG spans all shards); every store event (resident,
   evicted, request retired, skeleton GC) flows over the bus, and evictions
   that break a complete peer group run the paper's report/broadcast
-  protocol. Every shard therefore holds a live ERC replica of the WHOLE
+  protocol. The protocol *level* follows the store policy exactly as in
+  ``sim.ClusterSim``: a DAG-oblivious tier ships no peer profiles and a
+  completeness-oblivious one no eviction reports — replicas then track
+  residency only, via the legacy status channel. Every shard therefore
+  holds a live ERC replica of the WHOLE
   tier: a chain resident across shards is just a peer group whose members
   carry different namespaces, and cross-shard evictions keep all replicas
   coherent (``verify_replicas`` proves it against each shard's own store
@@ -33,6 +37,7 @@ from ..core import (BlockMeta, CacheMetrics, JobDAG, MessageBus, PeerTracker,
                     PeerTrackerMaster, TaskSpec)
 from .engine import Request, ServeEngine
 from .prefix_store import PrefixStore
+from .tiered import TieredKVStore
 
 
 def route_prefix(tokens: Sequence[int], n_shards: int,
@@ -58,6 +63,7 @@ class ShardedFrontend:
                  block_tokens: int = 16, eos_id: int = -1,
                  prefill_chunk: int = 8,
                  pool_blocks: Optional[int] = None,
+                 host_capacity_bytes: int = 0,
                  record_eviction_log: bool = False) -> None:
         assert n_shards >= 1
         self.n_shards = n_shards
@@ -70,9 +76,23 @@ class ShardedFrontend:
             tr.record_eviction_log = record_eviction_log
         self.master = PeerTrackerMaster(self.bus, n_shards)
         self.shards: List[ServeEngine] = []
+        self._distribute_profiles = True
+        self._coordinated = True
         for k in range(n_shards):
-            store = PrefixStore(capacity_bytes, policy,
-                                block_tokens=block_tokens)
+            if host_capacity_bytes > 0:
+                store: PrefixStore = TieredKVStore(
+                    capacity_bytes, policy, block_tokens=block_tokens,
+                    host_capacity_bytes=host_capacity_bytes)
+            else:
+                store = PrefixStore(capacity_bytes, policy,
+                                    block_tokens=block_tokens)
+            if k == 0:
+                # protocol level is a tier-wide deployment choice derived
+                # from the store policy, exactly as in sim.ClusterSim: a
+                # DAG-oblivious shard ships no peer profiles and only a
+                # completeness-aware one runs the report/bcast protocol
+                self._distribute_profiles = store.policy.uses_dag
+                self._coordinated = store.policy.uses_completeness
             self._wire(k, store)
             self.shards.append(ServeEngine(
                 cfg, params, max_slots=max_slots, max_seq=max_seq,
@@ -90,9 +110,11 @@ class ShardedFrontend:
         def on_evict(block_id: str, flipped: List[str]) -> None:
             # paper §III-C: report iff a complete peer group broke (the
             # master broadcasts, updating every shard's labels); the
-            # eviction itself always rides the legacy status channel
-            tracker.report_eviction(self._ns(shard, block_id),
-                                    [self._ns(shard, t) for t in flipped])
+            # eviction itself always rides the legacy status channel.
+            # Only a completeness-aware policy deploys the LERC protocol.
+            if self._coordinated:
+                tracker.report_eviction(self._ns(shard, block_id),
+                                        [self._ns(shard, t) for t in flipped])
             tracker.report_status("evicted", self._ns(shard, block_id))
 
         def on_status(event: str, ident: str) -> None:
@@ -108,6 +130,19 @@ class ShardedFrontend:
         newly created skeleton nodes are then reported materialized-on-disk
         (recomputable by prefill, not resident) over the status channel."""
         chain, tasks = store.request_profile(rid)
+        if not self._distribute_profiles:
+            # DAG-oblivious tier: no peer profile ships (replicas keep no
+            # DAG view), but the legacy status channel still announces the
+            # chain's skeleton blocks so residency replicas stay coherent.
+            # Dedup against the shard's OWN replica — bus-delivered state
+            # only, so this path survives a real-RPC bus.
+            replica = self.trackers[shard].state
+            for node in chain:
+                bid = self._ns(shard, node.block_id)
+                if bid not in replica.materialized:
+                    self.trackers[shard].report_status(
+                        "materialized_disk", bid)
+            return
         job = JobDAG()
         for node in chain:
             job.add_block(BlockMeta(id=self._ns(shard, node.block_id),
@@ -170,6 +205,8 @@ class ShardedFrontend:
                 assert {b for b in rs.cached
                         if b.startswith(pfx)} == resident, \
                     f"{getattr(tr, 'name', 'master')}: shard {k} residency"
+                if not self._distribute_profiles:
+                    continue   # no peer profile -> replica has no DAG view
                 for bid in eng.store._nodes:
                     nb = self._ns(k, bid)
                     assert rs.ref_count.get(nb, 0) == \
@@ -184,6 +221,22 @@ class ShardedFrontend:
             cache = cache.merge(eng.store.metrics_obj)
         out = cache.as_dict()
         out["used_bytes"] = sum(e.store.used for e in self.shards)
+        out["host_used_bytes"] = sum(getattr(e.store, "host_used", 0)
+                                     for e in self.shards)
+        # tier utilization, aggregated across shards (high-water sums are
+        # an upper bound on simultaneous use but exact per shard)
+        for key, get in (("pool_blocks", lambda e: e.pool.num_blocks),
+                         ("pool_blocks_in_use",
+                          lambda e: e.pool.blocks_in_use),
+                         ("pool_high_water", lambda e: e.pool.high_water)):
+            out[key] = sum(get(e) for e in self.shards)
+        host_pools = [e.store.host_pool for e in self.shards
+                      if getattr(e.store, "host_pool", None) is not None]
+        if host_pools:
+            out["host_blocks"] = sum(p.num_blocks for p in host_pools)
+            out["host_blocks_in_use"] = sum(p.blocks_in_use
+                                            for p in host_pools)
+            out["host_high_water"] = sum(p.high_water for p in host_pools)
         for field in ("steps", "prefill_tokens", "prefill_tokens_skipped",
                       "decoded_tokens"):
             out[field if field != "steps" else "engine_steps"] = \

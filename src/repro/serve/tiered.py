@@ -1,0 +1,273 @@
+"""Tiered KV store: LERC-aware demotion to a host-memory tier (PR 4).
+
+``core`` honors the paper's all-or-nothing property with a two-tier
+MemoryTier/DiskTier store: eviction moves a block to the slow tier, and a
+task only speeds up when *every* peer sits in the fast tier. This module
+gives the serving data plane the same shape. Tier 0 is the device-resident
+``KVBlockPool``; tier 1 is a preallocated ``HostBlockPool``. Under device
+pressure a prefix-cache block *demotes* — one jitted device→host row copy —
+instead of dying, and a later lookup that walks over demoted blocks
+*promotes* the usable chain back with a host→device scatter, paying a copy
+instead of a prefill recompute.
+
+Placement policy is the paper's machinery twice over:
+
+* **Demotion victims** are chosen by the store's existing
+  ``Policy``/``EvictionIndex`` over the shared ``DagState`` counters — so
+  LERC demotes members of broken peer groups (ERC 0) first and keeps
+  complete chains wholly on-device. An *effective* hit remains
+  tier-0-only: a partially demoted chain is "incomplete" in the paper's
+  sense and pays the max-over-blocks promotion copy before it is usable —
+  the all-or-nothing bottleneck, now one tier down.
+* **Final eviction out of the host tier** runs a second policy-driven
+  ``EvictionIndex`` over the same counters. A demoted block is never in
+  ``DagState.cached``, so every peer group through it is incomplete and a
+  completeness-aware key degrades gracefully to (reference count,
+  recency) — host retention follows who still *references* a chain, not
+  who recently used it.
+
+Tier-0 state transitions (demotion = eviction from the fast tier) keep
+the exact event stream the single-tier store emits: same
+``eviction_log``, same ``DagState.on_evicted`` completeness flips, same
+``on_evict``/``on_status`` coordination hooks — so a sharded frontend
+with tiered shards stays replica-coherent with no protocol changes, and
+with the host tier disabled this class is op-for-op a ``PrefixStore``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+from ..core import EvictionIndex, Policy, make_policy
+from .host_pool import HostBlockPool
+from .kv_pool import KVBlockPool
+from .prefix_store import Node, PrefixStore
+
+
+class TieredKVStore(PrefixStore):
+    """Two-tier prefix store: device pool (tier 0) + host pool (tier 1).
+
+    Construct like a ``PrefixStore`` plus a host-tier byte budget; the
+    engine attaches the actual pools (it owns the cache template) via
+    ``attach_pools``. With ``host_capacity_bytes == 0`` (or no pools
+    attached) every code path delegates to the base class, bit-identical
+    to a single-tier store.
+    """
+
+    def __init__(self, capacity_bytes: int,
+                 policy: Union[str, Policy] = "lerc",
+                 block_tokens: int = 16, *,
+                 host_capacity_bytes: int = 0,
+                 host_policy: Union[str, Policy, None] = None) -> None:
+        super().__init__(capacity_bytes, policy, block_tokens=block_tokens)
+        self.host_capacity = host_capacity_bytes
+        self.host_used = 0
+        if host_policy is None:
+            host_policy = make_policy(self.policy.name)
+        elif isinstance(host_policy, str):
+            host_policy = make_policy(host_policy)
+        self.host_policy = host_policy
+        self.host_index = EvictionIndex(self.host_policy, self.state)
+        self.device_pool: Optional[KVBlockPool] = None
+        self.host_pool: Optional[HostBlockPool] = None
+        self.host_eviction_log: List[str] = []
+        # demotions batched per ``_make_room`` call: (device row, host row).
+        # Victim selection interleaves with per-victim state updates, but
+        # the byte movement happens in ONE jitted gather + device_get at
+        # the end of the batch, before any freed device row can be reused.
+        self._pending_demotions: List[Tuple[int, int]] = []
+
+    # --------------------------------------------------------------- wiring
+    def attach_pools(self, device_pool: KVBlockPool,
+                     host_pool: HostBlockPool) -> None:
+        self.device_pool = device_pool
+        self.host_pool = host_pool
+        # fallback/final device evictions still free pool rows directly
+        self.evict_payload = device_pool.free
+
+    @property
+    def tiered(self) -> bool:
+        return (self.host_capacity > 0 and self.host_pool is not None
+                and self.host_pool.num_blocks > 0)
+
+    # ---------------------------------------------------------------- reads
+    def lookup(self, tokens: Sequence[int]) -> List[Node]:
+        """Longest chain resident in *either* tier from the root; demoted
+        blocks on it are promoted back to the device pool before the chain
+        is returned, so callers always receive tier-0 payloads.
+
+        Metrics follow the paper's definitions one tier down: a hit is
+        presence in any tier (``tier1_hits`` counts the slow-tier slice),
+        but a hit is *effective* only when every block up to it sits in
+        tier 0 — a partially demoted chain pays the promotion copy."""
+        if not self.tiered:
+            return super().lookup(tokens)
+        chain = self._walk(tokens)
+        usable: List[Node] = []
+        touched_t0: List[Node] = []
+        touched_t1: List[Node] = []
+        broken = False
+        all_t0 = True
+        for node in chain:
+            in_t0 = node.resident
+            in_t1 = node.host_payload is not None
+            hit = in_t0 or in_t1
+            if not hit:
+                broken = True
+            if in_t1:
+                all_t0 = False
+            self.metrics_obj.record_access(
+                hit=hit, effective=hit and not broken and all_t0,
+                tier=1 if in_t1 else 0)
+            if hit and not broken:
+                usable.append(node)
+            if in_t0:
+                touched_t0.append(node)
+            elif in_t1:
+                touched_t1.append(node)
+        for node in reversed(touched_t1):         # leaf first, root last
+            self.host_policy.on_access(node.block_id)
+        for node in reversed(touched_t0):
+            self.policy.on_access(node.block_id)
+        demoted = [n for n in usable if n.host_payload is not None]
+        if demoted:
+            self._promote(demoted, exclude={n.block_id for n in chain})
+        return usable
+
+    # --------------------------------------------------------------- writes
+    def _pre_insert(self, node: Node) -> None:
+        if node.host_payload is not None:
+            # the chain broke upstream of this block, so the engine
+            # recomputed it; the fresh KV supersedes the host copy
+            self._release_host(node)
+
+    # ----------------------------------------------------- tier-0 pressure
+    def _make_room(self, needed: int, exclude: set) -> None:
+        super()._make_room(needed, exclude)
+        self._flush_demotions()
+
+    def _evict(self, node: Node) -> None:
+        """Tier-0 eviction under tiering is a *demotion*: identical
+        store-visible event stream (eviction log, counter flips,
+        coordination hooks), but the payload moves to the host pool
+        instead of dying. Falls back to a true eviction when the host
+        tier cannot hold the block."""
+        if not self.tiered:
+            return super()._evict(node)
+        self._make_host_room(node.nbytes)
+        if (self.host_used + node.nbytes > self.host_capacity
+                or not self.host_pool.free_list):
+            return super()._evict(node)
+        host_idx = self.host_pool.alloc()
+        self._pending_demotions.append((node.payload, host_idx))
+        node.host_payload = host_idx
+        node.payload = None
+        node.resident = False
+        self.used -= node.nbytes
+        self.host_used += node.nbytes
+        self.metrics_obj.evictions += 1
+        self.metrics_obj.demotions += 1
+        self.eviction_log.append(node.block_id)
+        self.index.discard(node.block_id)
+        self.policy.on_remove(node.block_id)
+        # complete -> incomplete flips propagate exactly as for a real
+        # eviction: the block left the fast tier (the paper's broadcast
+        # moment); replicas track tier-0 residency only
+        flipped = self.state.on_evicted(node.block_id)
+        # enter the slow tier's victim queue, keyed on post-flip counters
+        self.host_policy.on_insert(node.block_id)
+        self.host_index.add(node.block_id)
+        if self.on_evict is not None:
+            self.on_evict(node.block_id, flipped)
+
+    def _flush_demotions(self) -> None:
+        if not self._pending_demotions:
+            return
+        dev = [d for d, _ in self._pending_demotions]
+        host = [h for _, h in self._pending_demotions]
+        self._pending_demotions = []
+        self.host_pool.write_rows(host, self.device_pool.read_rows(dev))
+        for d in dev:
+            self.device_pool.free(d)
+
+    # ----------------------------------------------------- tier-1 pressure
+    def _make_host_room(self, needed: int) -> None:
+        while self.host_used + needed > self.host_capacity:
+            victim = self.host_index.pop_min()
+            if victim is None:
+                return
+            self._evict_host(self._nodes[victim])
+
+    def _release_host(self, node: Node) -> None:
+        """Free a node's host row (no eviction event). Cancels an unflushed
+        demotion of the same row: the device→host copy never happens and
+        the device row is freed directly."""
+        hp = node.host_payload
+        for i, (dev, host) in enumerate(self._pending_demotions):
+            if host == hp:
+                del self._pending_demotions[i]
+                self.device_pool.free(dev)
+                break
+        self.host_pool.free(hp)
+        node.host_payload = None
+        self.host_used -= node.nbytes
+        node.nbytes = 0
+        self.host_index.discard(node.block_id)
+        self.host_policy.on_remove(node.block_id)
+
+    def _evict_host(self, node: Node) -> None:
+        """Final eviction: the block leaves the system entirely (back to
+        recomputable-by-prefill). No ``DagState`` transition — a demoted
+        block was already out of ``cached`` — so no counter or label
+        changes, and nothing to coordinate."""
+        self._release_host(node)
+        self.metrics_obj.host_evictions += 1
+        self.host_eviction_log.append(node.block_id)
+        self._gc_upward(node)
+
+    def _gc_upward(self, node: Node) -> None:
+        """Skeleton GC after a host eviction: unlike ``complete_request``
+        pruning there is no chain list in hand, so walk parent links while
+        nodes are garbage (non-resident in both tiers, childless,
+        unreferenced)."""
+        while (node is not None and node.parent is not None
+               and self._is_garbage(node)):
+            parent = node.parent
+            self._forget_node(node)
+            node = parent
+
+    # ------------------------------------------------------------ promotion
+    def _promote(self, nodes: List[Node], exclude: Set[str]) -> None:
+        """Bring demoted blocks back on-device: make tier-0 room (which may
+        demote colder blocks — the whole looked-up chain is excluded), then
+        one host→device scatter for the batch. Mirrors
+        ``CacheManager.load_from_disk``: the blocks re-enter the fast tier
+        as loads, flipping their peer groups complete again."""
+        for node in nodes:
+            self.host_index.discard(node.block_id)
+        self._make_room(sum(n.nbytes for n in nodes), exclude=exclude)
+        host_rows = [n.host_payload for n in nodes]
+        dev_rows = [self.device_pool.alloc() for _ in nodes]
+        self.device_pool.write_rows(dev_rows,
+                                    self.host_pool.read_rows(host_rows))
+        for node, dev in zip(nodes, dev_rows):
+            self.host_pool.free(node.host_payload)
+            node.host_payload = None
+            node.payload = dev
+            node.resident = True
+            self.host_used -= node.nbytes
+            self.used += node.nbytes
+            self.host_policy.on_remove(node.block_id)
+            self.metrics_obj.promotions += 1
+            self.state.on_loaded(node.block_id)   # flips groups complete
+            self.index.add(node.block_id)
+            if self.on_status is not None:
+                self.on_status("loaded", node.block_id)
+        for node in reversed(nodes):              # leaf first, root last
+            self.policy.on_insert(node.block_id)
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, float]:
+        m = super().metrics()
+        m["host_used_bytes"] = self.host_used
+        m["host_capacity_bytes"] = self.host_capacity
+        return m

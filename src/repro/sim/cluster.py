@@ -48,6 +48,14 @@ class HardwareModel:
     disk_queue: bool = False                      # True: serialize the volume;
                                                   # False: parallel streams at
                                                   # per-stream disk_bw (EBS-like)
+    msg_latency: float = 0.0                      # s per bus hop: the driver
+                                                  # learns of a task's finish
+                                                  # one status-report hop after
+                                                  # it happens, so dependents
+                                                  # launch that much later.
+                                                  # 0 = instantaneous bus
+                                                  # (bit-identical to pre-PR-4
+                                                  # results)
 
 
 @dataclass
@@ -208,7 +216,10 @@ class ClusterSim:
         self._disk_free = [0.0] * self.n_workers
         free_slots = [self.hw.slots] * self.n_workers
         done: set = self._done
-        events: List[Tuple[float, int, str, int]] = []   # (t, seq, task, worker)
+        # (t, seq, kind, task, worker): "finish" = a task completes on a
+        # worker; "ready" = the driver *learns* a task became runnable
+        # (its last producer's status report arrived, hw.msg_latency later)
+        events: List[Tuple[float, int, str, str, int]] = []
         seq = itertools.count()
         per_job_finish: Dict[str, float] = {}
         task_runtimes: Dict[str, float] = {}
@@ -239,11 +250,19 @@ class ClusterSim:
                 free_slots[worker] -= 1
                 dur = self._task_duration(task, worker, clock)
                 task_runtimes[task.id] = dur
-                heapq.heappush(events, (clock + dur, next(seq), task.id, worker))
+                heapq.heappush(events, (clock + dur, next(seq), "finish",
+                                        task.id, worker))
 
         try_schedule()
         while events:
-            clock, _, tid, worker = heapq.heappop(events)
+            clock, _, kind, tid, worker = heapq.heappop(events)
+            if kind == "ready":
+                # the completion status report reached the driver: the
+                # dependent task is now visible to the scheduler
+                ready_by_job.setdefault(self.dag.tasks[tid].job, []) \
+                            .append(self.dag.tasks[tid])
+                try_schedule()
+                continue
             task = self.dag.tasks[tid]
             done.add(tid)
             free_slots[worker] += 1
@@ -270,8 +289,16 @@ class ClusterSim:
                     continue
                 unmet[cons] -= 1
                 if unmet[cons] == 0:
-                    ready_by_job.setdefault(self.dag.tasks[cons].job, []) \
-                                .append(self.dag.tasks[cons])
+                    if self.hw.msg_latency > 0:
+                        # the scheduler only sees the completion once the
+                        # worker's status report has crossed the bus
+                        heapq.heappush(events,
+                                       (clock + self.hw.msg_latency,
+                                        next(seq), "ready", cons, -1))
+                    else:
+                        ready_by_job.setdefault(
+                            self.dag.tasks[cons].job, []) \
+                            .append(self.dag.tasks[cons])
             try_schedule()
 
         self.verify_replicas()

@@ -39,9 +39,10 @@ def capacity(cfg, params):
     return probe._block_nbytes() * 10           # < working set -> evictions
 
 
-def _run_frontend(cfg, params, n_shards, reqs, per_shard_cap, **kwargs):
+def _run_frontend(cfg, params, n_shards, reqs, per_shard_cap,
+                  policy="lerc", **kwargs):
     fe = ShardedFrontend(cfg, params, n_shards, max_slots=1, max_seq=64,
-                         capacity_bytes=per_shard_cap, policy="lerc",
+                         capacity_bytes=per_shard_cap, policy=policy,
                          block_tokens=BT, **kwargs)
     out = [fe.submit(r, max_new=MAX_NEW)[1] for r in reqs]
     fe.run()
@@ -106,6 +107,39 @@ def test_per_shard_eviction_logs_match_replicas(model):
     assert s.eviction_broadcasts <= total_evictions
     assert s.peer_profile_broadcasts == len(reqs)
     assert s.lerc_bytes > 0 and s.payload_bytes > s.lerc_bytes
+
+
+def test_protocol_level_follows_store_policy(model):
+    """Matching the sim's deployment rule: a DAG-oblivious shard ships
+    ZERO LERC traffic (no peer profiles, no eviction reports/broadcasts),
+    a DAG-aware-but-completeness-oblivious one ships profiles only, and
+    in both cases the legacy status channel keeps replicas
+    residency-coherent."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    cap = capacity(cfg, params)
+
+    single = ServeEngine(cfg, params, max_slots=1, max_seq=64,
+                         store=PrefixStore(cap, "lru", block_tokens=BT))
+    sreqs = [single.submit(r, max_new=MAX_NEW) for r in reqs]
+    single.run()
+
+    fe, freqs = _run_frontend(cfg, params, 2, reqs, cap, policy="lru")
+    s = fe.bus.stats
+    assert s.peer_profile_broadcasts == 0
+    assert s.eviction_reports == 0 and s.eviction_broadcasts == 0
+    assert s.lerc_bytes == 0
+    assert s.point_to_point > 0 and s.payload_bytes > 0
+    assert sum(e.store.evictions for e in fe.shards) > 0
+    fe.verify_replicas()                  # residency coherent without DAG
+    assert [r.generated for r in freqs] == [r.generated for r in sreqs]
+
+    # lrc: uses_dag but not uses_completeness -> profiles, no reports
+    fe_lrc, _ = _run_frontend(cfg, params, 2, reqs, cap, policy="lrc")
+    s = fe_lrc.bus.stats
+    assert s.peer_profile_broadcasts == len(reqs)
+    assert s.eviction_reports == 0 and s.eviction_broadcasts == 0
+    fe_lrc.verify_replicas()
 
 
 def test_affinity_routing_preserves_prefix_reuse(model):

@@ -115,3 +115,41 @@ def test_belady_optimizes_the_wrong_metric():
     assert belady.metrics.hit_ratio >= lerc.metrics.hit_ratio * 0.999
     # ...but LERC matches or beats it on what actually matters
     assert lerc.makespan <= belady.makespan * 1.05
+
+
+def test_msg_latency_charges_bus_delay():
+    """HardwareModel.msg_latency delays the driver learning that a task
+    became runnable by one status-report hop (charged when the LAST
+    missing producer reports — a join pays one hop, not one per edge), so
+    each link of a linear chain adds exactly one hop to the makespan; the
+    default (0) is the seed's instantaneous bus."""
+    import pytest as _pytest
+
+    from repro.core import BlockMeta, JobDAG, TaskSpec
+
+    assert HardwareModel().msg_latency == 0.0
+
+    def chain_job(n=5, size=10 * 2 ** 20):
+        dag = JobDAG()
+        prev = dag.add_source("src", 0, size=size).id
+        for i in range(n):
+            dag.add_block(BlockMeta(id=f"b{i}", size=size, dataset="d",
+                                    index=i))
+            dag.add_task(TaskSpec(id=f"t{i}", inputs=(prev,),
+                                  output=f"b{i}", job="j"))
+            prev = f"b{i}"
+        return dag
+
+    def run(latency):
+        sim = ClusterSim(2, HardwareModel(msg_latency=latency),
+                         policy="lerc")
+        sim.submit(chain_job())
+        return sim.run()
+
+    base = run(0.0)
+    delayed = run(0.5)
+    # 5 tasks, 4 producer->consumer edges, one hop each
+    assert delayed.makespan == _pytest.approx(base.makespan + 4 * 0.5)
+    # the delay is pure scheduling latency: caching behavior unchanged
+    assert delayed.metrics.hits == base.metrics.hits
+    assert delayed.metrics.evictions == base.metrics.evictions

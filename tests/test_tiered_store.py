@@ -1,0 +1,161 @@
+"""Tiered KV store (PR 4): tier equivalence and promotion semantics.
+
+Three contracts: (1) with the host tier disabled the tiered store is
+op-for-op the single-tier engine — same tokens, same eviction log;
+(2) a re-referenced evicted prefix is served by *promotion* — zero
+prefill recompute dispatches for the demoted blocks — and promoted
+chains generate token-identically to recomputed ones; (3) a sharded
+frontend with tiered shards matches the single tiered engine."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import init_params, model_spec
+from repro.serve import (PrefixStore, ServeEngine, ShardedFrontend,
+                         TieredKVStore)
+
+BT = 8          # block_tokens
+PROMPT = 40     # uniform prompt length (5 blocks: 4 prefix + 1 suffix)
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get("qwen2_7b", smoke=True)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=cfg.dtype)
+    return cfg, params
+
+
+def _block_bytes(cfg, params):
+    probe = ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                        store=PrefixStore(1 << 30, "lerc", block_tokens=BT),
+                        pool_blocks=1)
+    return probe._block_nbytes()
+
+
+def workload(vocab, n_requests=12, n_families=4, seed=3):
+    rng = np.random.default_rng(seed)
+    prefixes = [list(rng.integers(0, vocab, PROMPT - BT))
+                for _ in range(n_families)]
+    return [prefixes[i % n_families]
+            + list(rng.integers(0, vocab, BT)) for i in range(n_requests)]
+
+
+def _engine(cfg, params, store):
+    return ServeEngine(cfg, params, max_slots=1, max_seq=64, store=store,
+                       prefill_chunk=BT)
+
+
+def _serve(eng, reqs):
+    out = [eng.submit(r, max_new=MAX_NEW) for r in reqs]
+    eng.run()
+    return out
+
+
+def test_host_tier_disabled_is_bit_identical(model):
+    """host_capacity 0 (the --host-cache-kb 0 path): every op — tokens,
+    eviction log, counters — identical to today's single-tier engine."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    cap = _block_bytes(cfg, params) * 8          # < working set: evictions
+
+    plain = _engine(cfg, params, PrefixStore(cap, "lerc", block_tokens=BT))
+    tiered = _engine(cfg, params,
+                     TieredKVStore(cap, "lerc", block_tokens=BT,
+                                   host_capacity_bytes=0))
+    preqs = _serve(plain, reqs)
+    treqs = _serve(tiered, reqs)
+
+    assert plain.store.evictions > 0, "workload produced no pressure"
+    assert [r.generated for r in treqs] == [r.generated for r in preqs]
+    assert tiered.store.eviction_log == plain.store.eviction_log
+    assert [r.prefill_skipped for r in treqs] == \
+        [r.prefill_skipped for r in preqs]
+    pm, tm = plain.metrics(), tiered.metrics()
+    assert all(tm[k] == pm[k] for k in pm
+               if k not in ("host_blocks", "host_blocks_in_use",
+                            "host_high_water"))
+    assert tm["demotions"] == tm["promotions"] == tm["tier1_hits"] == 0
+
+
+def test_promotion_serves_evicted_prefix_without_recompute(model):
+    """After device pressure demotes a family's chain, re-referencing it
+    is served by promotion: the engine skips prefill for every demoted
+    block (only the fresh suffix is computed) and the generated tokens
+    are identical to the recompute path."""
+    cfg, params = model
+    blk = _block_bytes(cfg, params)
+    rng = np.random.default_rng(17)
+    fam_a = list(rng.integers(0, cfg.vocab, PROMPT - BT))
+    others = [list(rng.integers(0, cfg.vocab, PROMPT))
+              for _ in range(3)]
+    suffix1 = list(rng.integers(0, cfg.vocab, BT))
+    suffix2 = list(rng.integers(0, cfg.vocab, BT))
+
+    def run_engine(host_blocks):
+        store = TieredKVStore(blk * 6, "lerc", block_tokens=BT,
+                              host_capacity_bytes=blk * host_blocks) \
+            if host_blocks else \
+            PrefixStore(blk * 6, "lerc", block_tokens=BT)
+        eng = _engine(cfg, params, store)
+        _serve(eng, [fam_a + suffix1])           # warm family A
+        _serve(eng, others)                      # pressure demotes/evicts A
+        pre_prefill = eng.prefill_tokens
+        req = _serve(eng, [fam_a + suffix2])[0]  # re-reference A
+        return eng, req, eng.prefill_tokens - pre_prefill
+
+    tiered, treq, trecompute = run_engine(host_blocks=64)
+    m = tiered.metrics()
+    assert m["demotions"] > 0, "no device pressure"
+    assert m["promotions"] >= 4, "prefix chain was not promoted"
+    assert m["tier1_hits"] >= 4
+    # zero prefill recompute for the demoted blocks: the 4-block shared
+    # prefix is skipped entirely, only the fresh suffix is prefilled
+    assert treq.prefill_skipped == PROMPT - BT
+    assert trecompute == BT
+
+    plain, preq, precompute = run_engine(host_blocks=0)
+    assert precompute > BT, "recompute baseline unexpectedly warm"
+    # promoted KV is exact: generation identical to the recompute path
+    assert treq.generated == preq.generated
+
+
+def test_tiered_sharded_matches_single(model):
+    """A ShardedFrontend with tiered shards is token-identical to the
+    single tiered engine, K=1 op-for-op (same eviction log), and leaves
+    every coordination replica coherent across demotions/promotions."""
+    cfg, params = model
+    reqs = workload(cfg.vocab, n_requests=16, seed=11)
+    blk = _block_bytes(cfg, params)
+    # host tier smaller than the spilled working set, so the second
+    # (host) eviction index and its skeleton GC run too
+    cap, host_cap = blk * 8, blk * 10
+
+    single = _engine(cfg, params,
+                     TieredKVStore(cap, "lerc", block_tokens=BT,
+                                   host_capacity_bytes=host_cap))
+    sreqs = _serve(single, reqs)
+    assert single.store.metrics_obj.demotions > 0
+    assert single.store.metrics_obj.promotions > 0
+    assert single.store.metrics_obj.host_evictions > 0, \
+        "host tier produced no final evictions"
+
+    for n_shards in (1, 2):
+        fe = ShardedFrontend(cfg, params, n_shards, max_slots=1,
+                             max_seq=64, capacity_bytes=cap, policy="lerc",
+                             block_tokens=BT, prefill_chunk=BT,
+                             host_capacity_bytes=host_cap)
+        freqs = [fe.submit(r, max_new=MAX_NEW)[1] for r in reqs]
+        fe.run()
+        assert [r.generated for r in freqs] == \
+            [r.generated for r in sreqs], f"shards={n_shards}"
+        fe.verify_replicas()
+        if n_shards == 1:
+            assert fe.shards[0].store.eviction_log == \
+                single.store.eviction_log
+            assert fe.shards[0].store.host_eviction_log == \
+                single.store.host_eviction_log
+            assert [r.prefill_skipped for r in freqs] == \
+                [r.prefill_skipped for r in sreqs]
