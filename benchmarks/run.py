@@ -2,30 +2,60 @@
 framework-level benches (prefix cache, roofline extraction).
 
 Usage:
-    PYTHONPATH=src python -m benchmarks.run              # everything
-    PYTHONPATH=src python -m benchmarks.run fig5         # one benchmark
+    PYTHONPATH=src python -m benchmarks.run                # everything
+    PYTHONPATH=src python -m benchmarks.run fig5           # one benchmark
+    PYTHONPATH=src python -m benchmarks.run --toy \
+        --json BENCH_5.json serve_throughput               # CI artifact
+
+``--json PATH`` collects every executed benchmark's saved result rows
+(benchmarks/results/<name>.json) into one artifact, so the perf
+trajectory of the repo is a single machine-readable file per run.
+``--toy`` runs benchmarks that support it at CI scale.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
+import json
+import os
 import sys
 import time
 
+from .common import RESULTS_DIR
 
-def _bench(name, fn):
+
+def _bench(name, fn, toy: bool) -> None:
     t0 = time.time()
     print(f"\n######## {name} ########")
-    fn()
+    if toy and "toy" in inspect.signature(fn).parameters:
+        fn(toy=True)
+    else:
+        fn()
     print(f"[{name}] done in {time.time() - t0:.1f}s")
 
 
 def main(argv=None) -> None:
-    argv = argv if argv is not None else sys.argv[1:]
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benchmarks", nargs="*",
+                    help="benchmark names (default: all)")
+    ap.add_argument("--toy", action="store_true",
+                    help="CI scale for benchmarks that support it")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write one artifact collecting every executed "
+                         "benchmark's result rows")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:])
+
     from . import fig3_all_or_nothing, fig5_makespan, fig6_fig7_hit_ratios
     registry = {
         "fig3": fig3_all_or_nothing.main,
         "fig5": fig5_makespan.main,
         "fig6_fig7": fig6_fig7_hit_ratios.main,
     }
+    # saved-result filenames, where they differ from the registry key
+    result_names = {"fig3": "fig3_all_or_nothing", "fig5": "fig5_makespan",
+                    "fig6_fig7": "fig6_fig7_hit_ratios",
+                    "group_size": "group_size_scaling",
+                    "pipeline": "pipeline_bench"}
     for mod, key in (("policy_frontier", "policy_frontier"),
                      ("group_size_scaling", "group_size"),
                      ("eviction_scaling", "eviction_scaling"),
@@ -41,11 +71,24 @@ def main(argv=None) -> None:
         except ImportError:
             pass
 
-    wanted = argv or list(registry)
+    wanted = args.benchmarks or list(registry)
     for name in wanted:
         if name not in registry:
             raise SystemExit(f"unknown benchmark {name!r}; have {sorted(registry)}")
-        _bench(name, registry[name])
+        _bench(name, registry[name], args.toy)
+
+    if args.json:
+        artifact = {"toy": args.toy, "benchmarks": {}}
+        for name in wanted:
+            path = os.path.join(RESULTS_DIR,
+                                f"{result_names.get(name, name)}.json")
+            if os.path.exists(path):
+                with open(path) as f:
+                    artifact["benchmarks"][name] = json.load(f)
+        with open(args.json, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"\nwrote {args.json} "
+              f"({sorted(artifact['benchmarks'])})")
 
 
 if __name__ == "__main__":

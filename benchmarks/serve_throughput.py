@@ -1,112 +1,185 @@
-"""Serve hot-path throughput: legacy (token-at-a-time, host-payload KV)
-vs the PR 2 data plane (chunked prefill + device-resident paged KV pool).
+"""Serve hot-path throughput across the three data planes: legacy
+(token-at-a-time, host-payload KV), gather (PR 2: chunked prefill +
+gather/scatter against the device pool), and paged (PR 5: zero-copy block
+tables, decode straight out of the pool).
 
-Shared-prefix workload on the real smoke model. Reports engine steps
-(jitted dispatches), wall-clock, and end-to-end tokens/s for each engine;
-the acceptance target is >=3x tokens/s and >=4x fewer prefill dispatches
-at prefill_chunk=8. Each engine is warmed on a tiny throwaway workload
-first so compile time is excluded from the measured window.
+Shared-prefix workload on the real smoke model. Reports engine steps,
+KV-transfer dispatches (gathers/scatters/CoW copies), dispatches per
+request, wall-clock, end-to-end tokens/s, and resident device KV bytes.
+The paged arm's pool is sized to the *same device byte budget* the gather
+arm spends on pool + per-slot contiguous caches, so the usable-pool-blocks
+column shows what eliminating the per-slot cache buys. Acceptance targets:
+>=1.3x tokens/s paged-vs-gather and >=1.5x usable pool blocks at equal
+device bytes (plus the PR 2 target, >=3x pooled-vs-legacy). Each engine is
+warmed on the full workload first so compile time is excluded.
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
 
 from .common import print_table, save_results
 
-# prefill-dominated shape: this PR optimizes the prompt hot path (decode
-# steps cost the same in both engines and would dilute the signal)
+# prefill-dominated shape: prompt processing is the serve hot path, and
+# the paged plane additionally removes per-request transfer dispatches
 N_REQUESTS = 16
 N_FAMILIES = 4
 PREFIX = 72
 SUFFIX = 8
 MAX_NEW = 4
 MAX_SEQ = 128
+MAX_SLOTS = 8       # throughput shape: wide continuous batches make the
+                    # per-request transfer dispatches the gather plane
+                    # pays (admission gather + publish scatter) a large
+                    # share of total dispatches
 BT = 8
 
 
-def _workload(vocab, seed=0):
+def _workload(vocab, n_requests, seed=0):
     rng = np.random.default_rng(seed)
     prefixes = [list(rng.integers(0, vocab, PREFIX))
                 for _ in range(N_FAMILIES)]
     return [prefixes[i % N_FAMILIES]
             + list(rng.integers(0, vocab, SUFFIX))
-            for i in range(N_REQUESTS)]
+            for i in range(n_requests)]
 
 
-def _run(make_engine, reqs) -> dict:
-    # warm-up: run the FULL workload on a throwaway engine so every
-    # (batch, chunk, pool-transfer) specialization is compiled before the
-    # measured window (jitted fns are shared per-config across engines)
-    warm = make_engine()
-    for r in reqs:
-        warm.submit(r, max_new=MAX_NEW)
-    warm.run()
-    # best-of-3: CPU wall-clock noise at smoke scale rivals the signal
-    wall = float("inf")
-    for _ in range(3):
-        eng = make_engine()
-        t0 = time.perf_counter()
+def _run_arms(arms, reqs, repeats=5) -> list:
+    """Measure every (name, make_engine) arm best-of-N with the repeat
+    loops *interleaved*, so a background-load spike penalizes all arms
+    equally instead of whichever one it landed on."""
+    # warm-up: run the FULL workload on a throwaway engine per arm so
+    # every (batch, chunk, pool-transfer) specialization is compiled
+    # before the measured window (jitted fns are shared per-config)
+    for _, mk in arms:
+        warm = mk()
         for r in reqs:
-            eng.submit(r, max_new=MAX_NEW)
-        eng.run()
-        wall = min(wall, time.perf_counter() - t0)
-    m = eng.metrics()
-    tokens = m["prefill_tokens"] + m["decoded_tokens"]
-    return {
-        "engine_steps": m["engine_steps"],
-        "wall_s": round(wall, 3),
-        "tokens": tokens,
-        "tokens_per_s": round(tokens / wall, 1),
-        "prefill_saved_frac": round(m["prefill_saved_frac"], 3),
-        "evictions": m["evictions"],
-    }
+            warm.submit(r, max_new=MAX_NEW)
+        warm.run()
+    walls = {name: float("inf") for name, _ in arms}
+    last = {}
+    for _ in range(repeats):
+        for name, mk in arms:
+            eng = mk()
+            t0 = time.perf_counter()
+            for r in reqs:
+                eng.submit(r, max_new=MAX_NEW)
+            eng.run()
+            walls[name] = min(walls[name], time.perf_counter() - t0)
+            last[name] = eng
+    rows = []
+    for name, _ in arms:
+        m = last[name].metrics()
+        wall = walls[name]
+        tokens = m["prefill_tokens"] + m["decoded_tokens"]
+        transfers = m.get("kv_transfer_dispatches", 0)
+        rows.append({
+            "engine": name,
+            "engine_steps": m["engine_steps"],
+            "kv_transfers": transfers,
+            "disp_per_req": round((m["engine_steps"] + transfers)
+                                  / len(reqs), 1),
+            "wall_s": round(wall, 3),
+            "tokens": tokens,
+            "tokens_per_s": round(tokens / wall, 1),
+            "device_kv_kb": round(m.get("device_kv_bytes", 0) / 1024, 1),
+            "pool_blocks": m.get("pool_blocks", 0),
+            "syncs_avoided": m.get("host_syncs_avoided", 0),
+            "prefill_saved_frac": round(m["prefill_saved_frac"], 3),
+            "evictions": m["evictions"],
+        })
+    return rows
 
 
-def main() -> None:
+def main(toy: bool = False) -> None:
     import jax
     from repro import configs
     from repro.models import init_params, model_spec
     from repro.serve import LegacyServeEngine, PrefixStore, ServeEngine
 
+    n_requests = 8 if toy else N_REQUESTS
+    repeats = 1 if toy else 12
     cfg = configs.get("qwen2_7b", smoke=True)
     params = init_params(jax.random.key(0), model_spec(cfg),
-                        dtype=cfg.dtype)
-    reqs = _workload(cfg.vocab)
+                         dtype=cfg.dtype)
+    reqs = _workload(cfg.vocab, n_requests)
 
-    probe = ServeEngine(cfg, params, max_slots=3, max_seq=MAX_SEQ,
+    probe = ServeEngine(cfg, params, max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
                         store=PrefixStore(1 << 30, "lerc", block_tokens=BT),
                         pool_blocks=1)
-    budget = probe._block_nbytes() * 16
+    # moderate pressure: the store still evicts (the O(1) index-free path
+    # is on the measured path) without eviction bookkeeping — identical in
+    # every arm — swamping the data-plane signal this benchmark targets
+    budget = probe._block_nbytes() * 32
 
     def legacy():
         return LegacyServeEngine(
-            cfg, params, max_slots=3, max_seq=MAX_SEQ,
+            cfg, params, max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
             store=PrefixStore(budget, "lerc", block_tokens=BT))
 
-    def pooled(chunk):
+    def gather(chunk):
         return lambda: ServeEngine(
-            cfg, params, max_slots=3, max_seq=MAX_SEQ,
+            cfg, params, max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
             store=PrefixStore(budget, "lerc", block_tokens=BT),
             prefill_chunk=chunk)
 
-    rows = [{"engine": "legacy (host KV, chunk=1)", **_run(legacy, reqs)}]
-    for chunk in (4, 8):
-        rows.append({"engine": f"pooled (device KV, chunk={chunk})",
-                     **_run(pooled(chunk), reqs)})
-    print_table("Serve hot path: old vs new data plane", rows,
-                ["engine", "engine_steps", "wall_s", "tokens",
-                 "tokens_per_s", "prefill_saved_frac", "evictions"])
-    save_results("serve_throughput", rows)
+    # the paged arm may spend the gather arm's ENTIRE device KV byte
+    # budget (pool + per-slot contiguous caches) on pool rows: same
+    # bytes, many more usable blocks — what "hits are free" buys back.
+    # It only ALLOCATES what this workload can touch (store budget +
+    # per-slot tail rows for the request horizon): carrying dead rows
+    # through every step would burn the very bytes-per-step the paged
+    # plane saves.
+    gprobe = gather(8)()
+    gather_kv_bytes = gprobe.pool.nbytes + sum(
+        leaf.nbytes for leaf in jax.tree.leaves(gprobe.cache))
+    budget_blocks = int(gather_kv_bytes // probe._block_nbytes())
+    horizon_rows = -(-(PREFIX + SUFFIX + MAX_NEW) // BT)
+    paged_pool_blocks = min(budget_blocks,
+                            32 + MAX_SLOTS * horizon_rows + 1)
 
-    base, best = rows[0], rows[-1]
-    speedup = best["tokens_per_s"] / base["tokens_per_s"]
-    step_ratio = base["engine_steps"] / best["engine_steps"]
-    print(f"\npooled+chunked vs legacy: {speedup:.1f}x tokens/s, "
-          f"{step_ratio:.1f}x fewer dispatches "
-          f"(target: >=3x tokens/s at smoke scale)")
+    def paged():
+        return ServeEngine(
+            cfg, params, max_slots=MAX_SLOTS, max_seq=MAX_SEQ,
+            store=PrefixStore(budget, "lerc", block_tokens=BT),
+            prefill_chunk=8, paged=True, pool_blocks=paged_pool_blocks)
+
+    rows = _run_arms(
+        [("legacy (host KV, chunk=1)", legacy),
+         ("gather (device pool, chunk=4)", gather(4)),
+         ("gather (device pool, chunk=8)", gather(8)),
+         ("paged (zero-copy block tables, chunk=8)", paged)],
+        reqs, repeats)
+
+    print_table("Serve hot path: legacy vs gather vs paged data plane",
+                rows,
+                ["engine", "engine_steps", "kv_transfers", "disp_per_req",
+                 "wall_s", "tokens", "tokens_per_s", "device_kv_kb",
+                 "pool_blocks", "syncs_avoided", "prefill_saved_frac",
+                 "evictions"])
+
+    base, gat, pag = rows[0], rows[-2], rows[-1]
+    pooled_speedup = gat["tokens_per_s"] / base["tokens_per_s"]
+    paged_speedup = pag["tokens_per_s"] / gat["tokens_per_s"]
+    block_ratio = pag["pool_blocks"] / max(gat["pool_blocks"], 1)
+    summary = {
+        "pooled_vs_legacy_tokens_per_s": round(pooled_speedup, 2),
+        "paged_vs_gather_tokens_per_s": round(paged_speedup, 2),
+        "paged_vs_gather_pool_blocks": round(block_ratio, 2),
+        "paged_device_kv_kb": pag["device_kv_kb"],
+        "gather_device_kv_kb": gat["device_kv_kb"],
+    }
+    print(f"\npooled+chunked vs legacy: {pooled_speedup:.1f}x tokens/s "
+          "(target: >=3x)")
+    print(f"paged vs gather: {paged_speedup:.1f}x tokens/s, "
+          f"{block_ratio:.1f}x usable pool blocks at "
+          f"{pag['device_kv_kb']:.0f} vs {gat['device_kv_kb']:.0f} KiB "
+          "device KV (targets: >=1.3x tokens/s, >=1.5x blocks)")
+    save_results("serve_throughput", rows + [{"engine": "summary",
+                                              **summary}])
 
 
 if __name__ == "__main__":
-    main()
+    main(toy="--toy" in sys.argv[1:])

@@ -19,6 +19,7 @@ from __future__ import annotations
 import argparse
 import time
 
+import jax
 import numpy as np
 
 from .common import print_table, save_results
@@ -45,11 +46,16 @@ def _families(vocab, n_families, prefix_tokens, seed=0):
 
 
 def _ttft(eng, prompt):
-    """Seconds from submit to the first generated token."""
+    """Seconds from submit to the first generated token. The engine
+    pipelines host readback (``generated`` fills lazily at completion),
+    so first-token time is the step that *emits* token one —
+    ``n_generated`` tracks that without forcing a device sync."""
     req = eng.submit(prompt, max_new=MAX_NEW)
     t0 = time.perf_counter()
-    while not req.generated:
+    while not req.n_generated:
         eng.step()
+    # the dispatch is async: the token exists once the step's output does
+    jax.block_until_ready(eng._prev_out)
     dt = time.perf_counter() - t0
     eng.run()                       # drain the tail decode steps
     return dt

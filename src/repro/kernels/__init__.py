@@ -1,8 +1,11 @@
 """repro.kernels — Pallas TPU kernels for the compute hot spots: flash
-attention (GQA/window/softcap), RG-LRU scan, RWKV6 chunked WKV. Each has a
-pure-jnp oracle in ref.py; tests sweep shapes/dtypes via interpret mode."""
-from .ops import (decode_attention, flash_attention, rglru_scan,
-                  rwkv6_wkv)
+attention (GQA/window/softcap), flash-decoding (plain and paged — the
+latter streams K/V tiles straight from the serving tier's KV block pool
+via scalar-prefetched block tables), RG-LRU scan, RWKV6 chunked WKV. Each
+has a pure-jnp oracle in ref.py; tests sweep shapes/dtypes via interpret
+mode."""
+from .ops import (decode_attention, flash_attention, paged_decode_attention,
+                  rglru_scan, rwkv6_wkv)
 
-__all__ = ["decode_attention", "flash_attention", "rglru_scan",
-           "rwkv6_wkv"]
+__all__ = ["decode_attention", "flash_attention", "paged_decode_attention",
+           "rglru_scan", "rwkv6_wkv"]

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from .decode_attention import decode_attention as _decode
 from .flash_attention import flash_attention as _flash
+from .paged_attention import paged_decode_attention as _paged_decode
 from .rglru_scan import rglru_scan_kernel as _rglru
 from .rwkv6_scan import rwkv6_chunked_kernel as _rwkv
 
@@ -57,3 +58,13 @@ def decode_attention(q, k, v, valid_len, *, window: Optional[int] = None,
     per-row valid lengths. q: (B,H,D) -> (B,H,D)."""
     return _decode(q, k, v, valid_len, window=window, softcap=softcap,
                    block_k=block_k, interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("softcap",))
+def paged_decode_attention(q, k_pages, v_pages, tables, qpos, *,
+                           softcap: Optional[float] = None):
+    """Paged flash-decoding: an (B,S,H,D) query chunk against KV pool
+    pages (num_blocks,bt,KV,D) addressed by per-sequence block tables
+    (B,NW); query (b,j) attends logical positions <= qpos[b,j]."""
+    return _paged_decode(q, k_pages, v_pages, tables, qpos,
+                         softcap=softcap, interpret=_interpret())

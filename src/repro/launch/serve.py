@@ -34,6 +34,16 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="prompt tokens per slot per engine step")
+    ap.add_argument("--paged-attention", dest="paged", action="store_true",
+                    default=None,
+                    help="decode straight out of the KV pool via per-slot "
+                         "block tables: hits are host-side table writes, "
+                         "publish transfers row ownership, no per-slot "
+                         "contiguous KV cache (default: on for uniform "
+                         "global-attention patterns)")
+    ap.add_argument("--no-paged-attention", dest="paged",
+                    action="store_false",
+                    help="force the PR 2 gather/scatter data plane")
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="device KV pool size in blocks "
                          "(default: sized to --cache-kb)")
@@ -53,6 +63,17 @@ def serve_main(argv=None) -> int:
     params = init_params(jax.random.key(args.seed), model_spec(cfg),
                          dtype=cfg.dtype)
     host_bytes = args.host_cache_kb * 1024
+    absolute_kv = set(cfg.layer_pattern) <= {"G", "M"}
+    if args.paged is None:
+        # zero-copy paged attention is the default wherever the KV layout
+        # supports it (absolute positions); the engine itself falls back
+        # to the gather plane — with a warning — if asked for more
+        args.paged = absolute_kv
+    if args.prefill_chunk > 1 and not absolute_kv:
+        print(f"warning: pattern {cfg.layer_pattern!r} has rolling/"
+              "recurrent layers; clamping --prefill-chunk to 1",
+              file=sys.stderr)
+        args.prefill_chunk = 1
     if args.shards > 1:
         eng = ShardedFrontend(
             cfg, params, args.shards, max_slots=args.slots,
@@ -60,7 +81,8 @@ def serve_main(argv=None) -> int:
             capacity_bytes=max(args.cache_kb * 1024 // args.shards, 1),
             policy=args.policy, block_tokens=args.block_tokens,
             prefill_chunk=args.prefill_chunk, pool_blocks=args.pool_blocks,
-            host_capacity_bytes=host_bytes // args.shards)
+            host_capacity_bytes=host_bytes // args.shards,
+            paged=args.paged)
     else:
         if host_bytes > 0:
             store: PrefixStore = TieredKVStore(
@@ -74,7 +96,7 @@ def serve_main(argv=None) -> int:
         eng = ServeEngine(cfg, params, max_slots=args.slots,
                           max_seq=args.max_seq, store=store,
                           prefill_chunk=args.prefill_chunk,
-                          pool_blocks=args.pool_blocks)
+                          pool_blocks=args.pool_blocks, paged=args.paged)
 
     if host_bytes > 0:
         # a host budget below one KV block (per shard) sizes the pool to
@@ -100,7 +122,10 @@ def serve_main(argv=None) -> int:
     if args.shards > 1:
         eng.verify_replicas()       # smoke doubles as a coherence proof
     m = eng.metrics()
+    paged_on = (all(e.paged for e in eng.shards) if args.shards > 1
+                else eng.paged)
     print(f"policy={args.policy}  shards={args.shards}  "
+          f"paged={'on' if paged_on else 'off'}  "
           f"host_cache_kb={args.host_cache_kb}  wall={time.time()-t0:.1f}s")
     for k, v in m.items():
         print(f"  {k:26s} {v:.3f}" if isinstance(v, float)

@@ -85,19 +85,23 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
-                mesh_ctx=None, unroll: int = 1, seq_lens=None):
+                mesh_ctx=None, unroll: int = 1, seq_lens=None,
+                paged_tables=None):
     """(logits (B,1,V), new_cache). tokens: (B,S) — S=1 for plain decode,
     S>1 for chunked prefill (per-row start ``pos``, real lengths
-    ``seq_lens``). pos: scalar absolute position or (B,) per-slot."""
+    ``seq_lens``). pos: scalar absolute position or (B,) per-slot.
+    ``paged_tables`` (B, NW): ``cache`` is the KV pool pytree and decode
+    runs straight out of the pool rows each row's block table names."""
     if cfg.family == "encdec":
-        if seq_lens is not None or tokens.shape[1] != 1:
+        if seq_lens is not None or tokens.shape[1] != 1 \
+                or paged_tables is not None:
             raise NotImplementedError(
-                "chunked decode is decoder-LM only (encdec is S=1)")
+                "chunked/paged decode is decoder-LM only (encdec is S=1)")
         return ED.encdec_decode_step(cfg, params, cache, tokens, pos,
                                      mesh_ctx=mesh_ctx, unroll=unroll)
     return LM.lm_decode_step(cfg, params, cache, tokens, pos,
                              mesh_ctx=mesh_ctx, unroll=unroll,
-                             seq_lens=seq_lens)
+                             seq_lens=seq_lens, paged_tables=paged_tables)
 
 
 # ---------------------------------------------------------------------------

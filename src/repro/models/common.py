@@ -49,6 +49,10 @@ class ModelConfig:
     attn_q_chunk: int = 2048        # chunked-attention tile sizes
     attn_kv_chunk: int = 2048
     exact_causal: bool = True       # prune upper-triangle chunks (§Perf)
+    decode_kernel: str = "auto"     # decode-attention backend: "flash"
+                                    # (Pallas flash-decoding / paged kernel,
+                                    # interpret mode off-TPU), "xla" (dense
+                                    # masked sdpa), "auto" (flash on TPU)
     # --- MLP / MoE ----------------------------------------------------------
     act: str = "swiglu"             # swiglu | geglu | gelu
     n_experts: int = 0

@@ -141,6 +141,38 @@ def _use_chunked(cfg: ModelConfig, Sq: int) -> bool:
     return Sq > 2048  # auto: full logits past 2k are prohibitive
 
 
+def _use_flash_decode(cfg: ModelConfig) -> bool:
+    """Route decode attention through the Pallas flash-decoding kernels
+    (plain or paged). "auto" compiles the real Mosaic kernels on TPU and
+    keeps the dense-mask XLA path elsewhere — off-TPU the kernels only
+    run in interpret mode, which validates tiling but wins nothing."""
+    if cfg.decode_kernel == "flash":
+        return True
+    if cfg.decode_kernel == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _paged_attention(cfg: ModelConfig, q, k_pages, v_pages, tables, qpos):
+    """Attention for a (B,Sq,H,D) query chunk straight out of KV pool
+    pages: ``k_pages``/``v_pages`` are (num_blocks, bt, KV, D), block
+    ``i`` of ``tables[b]`` backs logical positions [i*bt, (i+1)*bt) and
+    query token (b, j) attends positions <= qpos[b, j]. The kernel path
+    streams K/V tiles from pool rows named by the (scalar-prefetched)
+    table; the XLA path gathers the pages and reuses ``_sdpa`` so the
+    numerics match the gather engine's dense decode exactly."""
+    if _use_flash_decode(cfg):
+        from ..kernels import paged_decode_attention
+        return paged_decode_attention(q, k_pages, v_pages, tables, qpos,
+                                      softcap=cfg.attn_logit_softcap)
+    B, Sq = q.shape[:2]
+    NW, bt = tables.shape[1], k_pages.shape[-3]
+    kc = k_pages[tables].reshape((B, NW * bt) + k_pages.shape[-2:])
+    vc = v_pages[tables].reshape((B, NW * bt) + v_pages.shape[-2:])
+    m = jnp.arange(NW * bt)[None, None, :] <= qpos[:, :, None]
+    return _sdpa(cfg, q, kc, vc, m[:, None])
+
+
 def _tp_qkv_constraints(mesh_ctx, q, k, v):
     """Inside the TP region: heads over model, batch over data. When the
     head count does not divide the model axis (qwen2: 28H, whisper: 8H on
@@ -164,7 +196,7 @@ def _tp_qkv_constraints(mesh_ctx, q, k, v):
 
 def attention(cfg: ModelConfig, params, x, *, positions, window=None,
               cache: Optional[Dict] = None, cache_pos=None,
-              cache_valid_len=None,
+              cache_valid_len=None, paged: Optional[Dict] = None,
               cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
               bidirectional: bool = False, prefix_len: int = 0,
               mesh_ctx=None):
@@ -177,6 +209,13 @@ def attention(cfg: ModelConfig, params, x, *, positions, window=None,
         rolling local-attention caches) and attends to the first
         ``cache_valid_len`` slots. Keys keep the RoPE phase of the absolute
         position they were written with, so slot order is irrelevant.
+      * paged decode: ``cache`` = {"k","v"} per-layer KV *pool* views
+        (num_blocks, bt, KV, D) and ``paged`` = {"tables": (B, NW) pool
+        rows in chain order, "seq_lens": (B,) real tokens per row}. Each
+        slot's chunk is written into the tail pool rows its block table
+        names (right-padded and inactive-slot tokens land in reserved junk
+        row 0) and attention streams from the table's rows — no per-slot
+        contiguous cache exists. Absolute positions only (G/M layers).
       * cross: ``cross_kv`` provides precomputed (k, v) from the encoder.
     Returns (out, new_cache).
     """
@@ -205,7 +244,26 @@ def attention(cfg: ModelConfig, params, x, *, positions, window=None,
         # FIRST query token; query token j of a chunk sees j more (its own
         # write and its intra-chunk predecessors) — per-token causality for
         # Sq > 1 (chunked prefill), and exactly the old semantics at Sq=1.
-        if getattr(cache_pos, "ndim", 0) == 1:
+        if paged is not None:
+            # zero-copy paged data plane: write the chunk into the pool
+            # rows the block table names, attend straight out of the pool
+            tables, lens = paged["tables"], paged["seq_lens"]
+            bt = cache["k"].shape[-3]
+            tpos = cache_pos[:, None] + jnp.arange(Sq)[None, :]  # (B,Sq)
+            blk = jnp.minimum(tpos // bt, tables.shape[1] - 1)
+            rows = jnp.take_along_axis(tables, blk, axis=1)
+            # right-padded (and inactive-slot) tokens land in pool row 0,
+            # the engine's reserved junk row — real rows only ever see
+            # writes of real tokens
+            rows = jnp.where(jnp.arange(Sq)[None, :] < lens[:, None],
+                             rows, 0)
+            widx = (rows.reshape(-1), (tpos % bt).reshape(-1))
+            ck = cache["k"].at[widx].set(
+                k.reshape((B * Sq,) + k.shape[2:]).astype(cache["k"].dtype))
+            cv = cache["v"].at[widx].set(
+                v.reshape((B * Sq,) + v.shape[2:]).astype(cache["v"].dtype))
+            out = _paged_attention(cfg, q, ck, cv, tables, tpos)
+        elif getattr(cache_pos, "ndim", 0) == 1:
             # per-slot positions (continuous batching): each slot scatters
             # its Sq-token chunk at its own offset. Positions are absolute
             # (slot order == position) — rolling-window caches take the
@@ -217,9 +275,16 @@ def attention(cfg: ModelConfig, params, x, *, positions, window=None,
             Skv = ck.shape[1]
             base = (cache_pos + 1 if cache_valid_len is None
                     else cache_valid_len)
-            valid = base[:, None] + jnp.arange(Sq)[None, :]      # (B,Sq)
-            m = jnp.arange(Skv)[None, None, :] < valid[:, :, None]
-            out = _sdpa(cfg, q, ck, cv, m[:, None])              # (B,1,Sq,Skv)
+            if Sq == 1 and _use_flash_decode(cfg):
+                # flash-decoding: split-K streaming over the valid cache,
+                # no dense (Sq, Skv) mask materialized
+                from ..kernels import decode_attention as _flash_dec
+                out = _flash_dec(q[:, 0], ck, cv, base,
+                                 softcap=cfg.attn_logit_softcap)[:, None]
+            else:
+                valid = base[:, None] + jnp.arange(Sq)[None, :]  # (B,Sq)
+                m = jnp.arange(Skv)[None, None, :] < valid[:, :, None]
+                out = _sdpa(cfg, q, ck, cv, m[:, None])          # (B,1,Sq,Skv)
         else:
             # bulk decode: one shared position, dynamic-update-slice
             ck = jax.lax.dynamic_update_slice(
@@ -229,9 +294,18 @@ def attention(cfg: ModelConfig, params, x, *, positions, window=None,
             Skv = ck.shape[1]
             base = (cache_pos + 1 if cache_valid_len is None
                     else cache_valid_len)
-            valid = base + jnp.arange(Sq)                        # (Sq,)
-            m = jnp.arange(Skv)[None, :] < valid[:, None]        # (Sq,Skv)
-            out = _sdpa(cfg, q, ck, cv, m[None, None, :, :])
+            if Sq == 1 and _use_flash_decode(cfg):
+                # rolling (L) caches pass valid = min(pos+1, window): the
+                # whole wrapped buffer is live, so no window mask applies
+                # to cache slots and slot order stays irrelevant
+                from ..kernels import decode_attention as _flash_dec
+                out = _flash_dec(q[:, 0], ck, cv,
+                                 jnp.broadcast_to(base, (B,)),
+                                 softcap=cfg.attn_logit_softcap)[:, None]
+            else:
+                valid = base + jnp.arange(Sq)                    # (Sq,)
+                m = jnp.arange(Skv)[None, :] < valid[:, None]    # (Sq,Skv)
+                out = _sdpa(cfg, q, ck, cv, m[None, None, :, :])
         new_cache = {"k": ck, "v": cv}
     else:
         if _use_chunked(cfg, Sq):

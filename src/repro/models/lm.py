@@ -108,7 +108,7 @@ def lm_spec(cfg: ModelConfig) -> Dict:
 
 def _apply_sublayer(cfg: ModelConfig, kind: str, prm, h, *, positions,
                     mesh_ctx=None, cache=None, cache_pos=None,
-                    cache_valid_len=None, prefix_len: int = 0):
+                    cache_valid_len=None, paged=None, prefix_len: int = 0):
     """One pattern-unit sublayer. Returns (h, new_cache)."""
     window = cfg.window if kind in ("L", "R") else None
     new_cache = None
@@ -124,7 +124,8 @@ def _apply_sublayer(cfg: ModelConfig, kind: str, prm, h, *, positions,
             attn_out, new_cache = L.attention(
                 cfg, prm["attn"], x, positions=positions, window=window,
                 cache=cache, cache_pos=cache_pos,
-                cache_valid_len=cache_valid_len, mesh_ctx=mesh_ctx)
+                cache_valid_len=cache_valid_len, paged=paged,
+                mesh_ctx=mesh_ctx)
         else:
             attn_out, _ = L.attention(cfg, prm["attn"], x,
                                       positions=positions, window=window,
@@ -273,7 +274,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 
 def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
-                   mesh_ctx=None, unroll: int = 1, seq_lens=None):
+                   mesh_ctx=None, unroll: int = 1, seq_lens=None,
+                   paged_tables=None):
     """One decode step over a chunk of S tokens per row. tokens: (B,S);
     pos: scalar int32 (bulk decode, all rows aligned) or (B,) int32
     (continuous batching, per-slot start positions). For L layers the
@@ -288,17 +290,29 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
     at its own absolute offset — supported for G/M (global-attention)
     layers, whose cache slot order equals absolute position.
 
+    Paged decode (``paged_tables`` (B, NW) int32): ``cache`` is the KV
+    *pool* pytree (same structure, leaves (*lead, num_blocks, bt, KV, D));
+    row b's chunk is written into — and attended out of — the pool rows
+    its block table names. No per-slot contiguous KV exists. Requires
+    per-slot ``pos`` and ``seq_lens``; G/M layers only.
+
     Returns (logits (B,1,vocab), new_cache).
     """
     pat, n_rep, tail = unit_pattern(cfg)
     B, S = tokens.shape
     per_slot = getattr(pos, "ndim", 0) == 1
-    if S > 1:
+    if S > 1 or paged_tables is not None:
         unsupported = set(pat + tail) - {"G", "M"}
         if unsupported:
             raise NotImplementedError(
-                "chunked prefill needs absolute-position KV caches; layer"
-                f" kinds {sorted(unsupported)} are rolling/recurrent")
+                "chunked prefill and paged decode need absolute-position "
+                f"KV caches; layer kinds {sorted(unsupported)} are "
+                "rolling/recurrent")
+    paged = None
+    if paged_tables is not None:
+        assert per_slot and seq_lens is not None, \
+            "paged decode needs per-slot positions and seq_lens"
+        paged = {"tables": paged_tables, "seq_lens": seq_lens}
     h = L.embed(cfg, params["embed"], tokens)
     positions = (pos[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)[None, :]
                  if per_slot
@@ -333,7 +347,8 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
                                     positions=positions, mesh_ctx=mesh_ctx,
                                     cache=cache_r[key],
                                     cache_pos=sub_cache_pos(kind),
-                                    cache_valid_len=sub_valid_len(kind))
+                                    cache_valid_len=sub_valid_len(kind),
+                                    paged=paged)
             new_caches[key] = nc
         cache_stack = jax.tree.map(
             lambda c, n: jax.lax.dynamic_update_index_in_dim(
@@ -353,7 +368,8 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
         h, nc = _apply_sublayer(cfg, k, params[key], h, positions=positions,
                                 mesh_ctx=mesh_ctx, cache=cache[key],
                                 cache_pos=sub_cache_pos(k),
-                                cache_valid_len=sub_valid_len(k))
+                                cache_valid_len=sub_valid_len(k),
+                                paged=paged)
         new_cache[key] = nc
     if S > 1 or seq_lens is not None:
         # unembed only each row's last real token (padded rows are junk and

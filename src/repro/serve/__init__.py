@@ -1,12 +1,17 @@
-"""repro.serve — continuous-batching engine (chunked prefill, paged
-device-resident KV pool) over a DAG-aware radix prefix cache (the paper's
-all-or-nothing property on KV block chains), sharing the core eviction
-substrate (DagState counters + EvictionIndex). ``TieredKVStore`` +
-``HostBlockPool`` add core's two-tier semantics to the data plane:
-device-pressure victims demote to a host-memory tier and promote back on
-reuse instead of being recomputed. ``LegacyServeEngine`` and
-``ReferencePrefixStore`` are the frozen pre-optimization baselines the
-equivalence tests and benchmarks measure against."""
+"""repro.serve — continuous-batching engine over a DAG-aware radix prefix
+cache (the paper's all-or-nothing property on KV block chains), sharing
+the core eviction substrate (DagState counters + EvictionIndex). The
+default data plane is zero-copy paged attention: ``KVBlockPool`` is the
+only KV storage, slots own refcounted block tables, prefix hits are
+host-side table writes and decode streams straight out of the pool
+(Pallas paged flash-decoding on TPU); a gather/scatter plane remains as
+the fallback for non-absolute-position layer patterns, and chunked
+prefill rides both. ``TieredKVStore`` + ``HostBlockPool`` add core's
+two-tier semantics: device-pressure victims demote to a host-memory tier
+and promote back on reuse instead of being recomputed.
+``LegacyServeEngine`` and ``ReferencePrefixStore`` are the frozen
+pre-optimization baselines the equivalence tests and benchmarks measure
+against."""
 from .engine import Request, ServeEngine
 from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool

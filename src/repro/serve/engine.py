@@ -1,36 +1,49 @@
-"""Continuous-batching serve engine: chunked prefill over a device-resident
-paged KV pool, with a LERC prefix cache underneath.
+"""Continuous-batching serve engine over a device-resident paged KV pool,
+with a LERC prefix cache underneath.
 
-The serving data plane (PR 2) is built so the hot path is dominated by
-real compute, not Python-loop and PCIe overhead — the regime where the
-paper's claim (coordinated caching speeds up *jobs*) is measurable:
+The serving data plane is built so the hot path is dominated by real
+compute, not Python-loop and PCIe overhead — the regime where the paper's
+claim (coordinated caching speeds up *jobs*) is measurable:
 
 * **Chunked prefill** — each engine step feeds up to ``prefill_chunk``
-  prompt tokens per slot through one batched ``decode_step`` (per-slot
-  scatter writes in ``layers.attention`` handle ``Sq > 1`` chunks at
-  per-slot offsets), so a P-token prompt costs ~ceil(P/chunk) dispatches
-  instead of ~P. Prefill-chunk slots and decode slots share the dispatch;
-  decode rows are right-padded and masked.
-* **Paged KV pool** — prefix-cache payloads are indices into a
-  preallocated per-leaf device pool (``serve.kv_pool.KVBlockPool``). A hit
-  is a jitted gather pool→slot, an insert a jitted scatter slot→pool of
-  exactly the fresh blocks, and an eviction frees one index — zero
-  host↔device KV copies anywhere on the hit/insert path.
+  prompt tokens per slot through one batched ``decode_step``, so a P-token
+  prompt costs ~ceil(P/chunk) dispatches instead of ~P. Prefill-chunk
+  slots and decode slots share the dispatch; decode rows are right-padded
+  and masked.
+* **Zero-copy paged attention** (``paged=True``, PR 5) — the
+  ``KVBlockPool`` is the ONLY KV storage. Each slot owns a *block table*
+  (host-side list of pool rows); a prefix hit appends the store's rows to
+  the table (zero dispatches, zero copies), new tokens are written by the
+  model straight into the slot's tail pool rows, attention streams from
+  the rows the table names (``kernels.paged_attention`` on TPU, the same
+  ``_sdpa`` numerics via an XLA page gather elsewhere), and publish is an
+  ownership transfer of the already-written rows to the store. Rows are
+  refcounted: evicting a block another slot is still reading defers the
+  actual reclaim to that slot's completion. The per-slot contiguous
+  ``(B, max_seq)`` decode cache does not exist in this mode — its bytes
+  are free to grow the pool.
+* **Gather fallback** (``paged=False``, the PR 2 data plane) — per-slot
+  contiguous caches; a hit is a jitted gather pool→slot, publish a jitted
+  scatter slot→pool. Retained for rolling/recurrent layer patterns, whose
+  KV layout is not absolute-position.
+* **Pipelined host readback** — the argmax token of step N is routed into
+  step N+1's feed *on device* (decode feeds never round-trip through
+  host), so the engine only blocks on a device→host sync when a request
+  finishes (or every step when EOS detection is on). ``metrics()`` counts
+  the avoided syncs.
 
 Store-visible behavior (the sequence of ``register_request`` / ``lookup``
 / ``insert`` / ``complete_request`` calls and therefore every eviction
-decision) is unchanged from the legacy engine on workloads with uniform
-prompt/generation lengths; ``tests/test_engine_equivalence.py`` proves
-token-identical generations and bit-identical eviction logs against both
-``LegacyServeEngine`` and the brute-force ``ReferencePrefixStore``.
-
-The engine supports uniform global-attention patterns (every cache leaf a
-KV buffer indexed by absolute position) — smoke-scale configs serve as
-the integration testbed; the store itself is payload-agnostic.
+decision) is identical across both data planes and the legacy engine on
+uniform-length workloads; ``tests/test_engine_equivalence.py`` proves
+token-identical generations and bit-identical eviction logs paged vs
+gather vs ``LegacyServeEngine`` vs the brute-force
+``ReferencePrefixStore``.
 """
 from __future__ import annotations
 
 import itertools
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from functools import lru_cache
@@ -53,17 +66,37 @@ _DEFAULT_POOL_BLOCKS = 256
 
 
 @lru_cache(maxsize=None)
-def _step_fn(cfg: ModelConfig):
-    """One shared jitted step per (hashable) config: engines spun up on the
-    same model reuse every compiled (B, S) specialization instead of
-    retracing behind a fresh closure."""
+def _step_fn(cfg: ModelConfig, paged: bool):
+    """One shared jitted step per (hashable) config and data plane:
+    engines spun up on the same model reuse every compiled (B, S)
+    specialization instead of retracing behind a fresh closure. The KV
+    argument (per-slot cache or pool buffers) is donated so XLA updates
+    it in place; ``prev``/``use_prev`` route the previous step's argmax
+    into decode feeds without a host round-trip."""
 
-    def _step(p, c, t, pos, lens):
+    # meta rows: 0 = per-slot position, 1 = real tokens this step,
+    # 2 = route the previous argmax into column 0 (decode feed) — packed
+    # into ONE (3, B) host→device upload per step
+    if paged:
+        def _step(p, pool, t, meta, tables, prev):
+            pos, lens, use_prev = meta[0], meta[1], meta[2].astype(bool)
+            t = t.at[:, 0].set(jnp.where(use_prev, prev, t[:, 0]))
+            logits, new_pool = decode_step(cfg, p, pool, t, pos,
+                                           seq_lens=lens,
+                                           paged_tables=tables)
+            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), \
+                new_pool
+
+        return jax.jit(_step, donate_argnums=(1,))
+
+    def _step(p, c, t, meta, prev):
+        pos, lens, use_prev = meta[0], meta[1], meta[2].astype(bool)
+        t = t.at[:, 0].set(jnp.where(use_prev, prev, t[:, 0]))
         logits, new_cache = decode_step(cfg, p, c, t, pos, seq_lens=lens)
         return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), \
             new_cache
 
-    return jax.jit(_step)
+    return jax.jit(_step, donate_argnums=(1,))
 
 
 @dataclass
@@ -75,8 +108,12 @@ class Request:
     slot: int = -1
     pos: int = 0                    # next position to fill
     generated: List[int] = field(default_factory=list)
+    n_generated: int = 0            # tokens emitted (generated may lag:
+                                    # pipelined readback materializes lazily)
     prefill_skipped: int = 0
     done: bool = False
+    # un-synced per-step token vectors (pipelined readback)
+    _lazy_out: List = field(default_factory=list, repr=False)
 
 
 def _kv_leaves(cache) -> List[Tuple[Tuple[str, ...], jax.Array]]:
@@ -97,16 +134,33 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_slots: int = 4,
                  max_seq: int = 256, store: Optional[PrefixStore] = None,
                  eos_id: int = -1, prefill_chunk: int = 8,
-                 pool_blocks: Optional[int] = None) -> None:
-        for path, _ in _kv_leaves(init_decode_cache(cfg, 1, 8)):
+                 pool_blocks: Optional[int] = None,
+                 paged: bool = False) -> None:
+        template = init_decode_cache(cfg, 1, 8)
+        for path, _ in _kv_leaves(template):
             assert path[-1] in ("k", "v"), (
                 "ServeEngine supports uniform-KV patterns; got leaf "
                 f"{'/'.join(path)}")
-        if prefill_chunk > 1:
-            kinds = set(cfg.layer_pattern)
-            assert kinds <= {"G", "M"}, (
+        absolute_kv = set(cfg.layer_pattern) <= {"G", "M"}
+        if prefill_chunk > 1 and not absolute_kv:
+            warnings.warn(
                 "chunked prefill needs absolute-position KV caches; "
-                f"pattern {cfg.layer_pattern!r} has rolling/recurrent layers")
+                f"pattern {cfg.layer_pattern!r} has rolling/recurrent "
+                "layers — clamping prefill_chunk to 1", stacklevel=2)
+            prefill_chunk = 1
+        if paged and not absolute_kv:
+            warnings.warn(
+                "paged attention needs absolute-position KV caches; "
+                f"pattern {cfg.layer_pattern!r} has rolling/recurrent "
+                "layers — falling back to the gather engine", stacklevel=2)
+            paged = False
+        # rolling-window (L) KV keeps only the last `window` tokens, so a
+        # chain block cannot be restored into it: non-absolute patterns
+        # run the full store machinery (lookups, evictions, coordination)
+        # but pay prefill recompute instead of a restore. (The PR 2 assert
+        # used to reject these configs outright; the restore path it
+        # guarded was never valid for them.)
+        self.restore_prefix = absolute_kv
         self.cfg = cfg
         self.params = params
         self.B = max_slots
@@ -115,29 +169,48 @@ class ServeEngine:
                                           policy="lerc")
         self.eos_id = eos_id
         self.prefill_chunk = max(int(prefill_chunk), 1)
-        self.cache = init_decode_cache(cfg, self.B, max_seq)
+        self.paged = bool(paged)
 
         # ----- paged pool: sized so the store's byte budget, not the pool,
         # is always the binding constraint (bounded budgets evict — and
-        # free indices — before alloc; unbounded ones rely on growth)
+        # free indices — before alloc; unbounded ones rely on growth). In
+        # paged mode the pool additionally carries each slot's private tail
+        # rows — the bytes the per-slot contiguous cache used to pin.
         bt = self.store.block_tokens
-        blk_bytes = chain_block_nbytes(self.cache, bt)
+        self.table_width = -(-max_seq // bt)
+        blk_bytes = chain_block_nbytes(template, bt)
         if pool_blocks is None:
             by_capacity = -(-self.store.capacity // max(blk_bytes, 1))
             pool_blocks = int(min(by_capacity, _DEFAULT_POOL_BLOCKS))
-        self.pool = KVBlockPool(self.cache, bt, pool_blocks)
+            if self.paged:
+                pool_blocks += self.B * self.table_width + 1
+        self.pool = KVBlockPool(template, bt, pool_blocks)
+        if self.paged:
+            self.cache = None
+            # every right-padded / inactive-slot token is scattered into
+            # this reserved row, so real rows only ever see real writes
+            self._junk_row = self.pool.alloc()
+            assert self._junk_row == 0
+            self._tables: List[List[int]] = [[] for _ in range(self.B)]
+            # tables only change on admission/completion, not per decode
+            # step — keep the device copy and re-upload only when dirty
+            self._tables_dev = None
+            self._tables_dirty = True
+        else:
+            self.cache = init_decode_cache(cfg, self.B, max_seq)
         if isinstance(self.store, TieredKVStore):
             # tier 1: host-side pool sized to the store's host byte budget
             # (0 rows when the tier is disabled — the store then behaves
             # op-for-op like a plain PrefixStore)
             self.store.attach_pools(
                 self.pool,
-                HostBlockPool.for_device_pool(self.cache, self.pool,
+                HostBlockPool.for_device_pool(template, self.pool,
                                               self.store.host_capacity))
         else:
             self.store.evict_payload = self.pool.free
 
-        self._step_fn = _step_fn(cfg)
+        self._step = _step_fn(cfg, self.paged)
+        self._prev_out = jnp.zeros((self.B,), jnp.int32)
         self._rid = itertools.count(1)
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * self.B
@@ -145,6 +218,8 @@ class ServeEngine:
         self.decoded_tokens = 0
         self.prefill_tokens = 0
         self.prefill_tokens_skipped = 0
+        self.transfer_dispatches = 0    # gather/scatter/copy-on-write
+        self.readback_syncs = 0         # device→host blocking reads
 
     # ------------------------------------------------------------- requests
     def submit(self, prompt: Sequence[int], max_new: int = 16) -> Request:
@@ -158,10 +233,22 @@ class ServeEngine:
         return self.pool.block_nbytes
 
     def _publish(self, req: Request) -> None:
-        """Prefill complete: publish the prompt's KV chain into the pool.
-        The store makes room first (freeing pool indices O(1), no copies),
-        then the factory allocates one pool row per *fresh* block; a single
-        jitted scatter captures exactly those blocks from the slot."""
+        """Prefill complete: publish the prompt's KV chain into the store.
+
+        Paged: the chain's blocks already live in pool rows the slot's
+        block table names — the payload factory hands the store a shared
+        reference to each fresh block's row. Zero dispatches, zero copies.
+
+        Gather: the store makes room first (freeing pool indices O(1)),
+        then the factory allocates one pool row per fresh block and a
+        single jitted scatter captures exactly those blocks from the
+        slot's contiguous cache."""
+        if self.paged:
+            table = self._tables[req.slot]
+            self.store.insert(req.prompt,
+                              lambda i, _node: self.pool.share(table[i]),
+                              self.pool.block_nbytes)
+            return
         fresh: List[Tuple[int, int]] = []       # (chain position, pool row)
 
         def alloc(i, _node):
@@ -174,24 +261,47 @@ class ServeEngine:
             self.pool.scatter_from(self.cache, req.slot,
                                    [i for i, _ in fresh],
                                    [idx for _, idx in fresh])
+            self.transfer_dispatches += 1
 
     # ---------------------------------------------------------------- admit
     def _admit(self) -> None:
+        bt = self.store.block_tokens
         for i in range(self.B):
             if self.slots[i] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
             usable = self.store.lookup(req.prompt)
-            restored = 0
-            if usable:
+            if not self.restore_prefix:
+                usable = []             # hit metrics recorded; no restore
+            restored = len(usable) * bt
+            # the last prompt token is always recomputed: its logits seed
+            # generation and were never cached (vLLM does the same)
+            restored = min(restored, len(req.prompt) - 1)
+            if self.paged:
+                # prefix hit = a host-side block-table write: the slot
+                # reads the store's rows in place (refcounted shares)
+                table = [self.pool.share(n.payload) for n in usable]
+                if table and restored < len(table) * bt:
+                    # fully-resident chain: the final block must absorb
+                    # the recomputed last prompt token — copy-on-write so
+                    # the store's row stays pristine
+                    priv = self.pool.alloc()
+                    self.pool.copy_row(table[-1], priv)
+                    self.pool.free(table[-1])
+                    table[-1] = priv
+                    self.transfer_dispatches += 1
+                # private tail rows for the rest of the prompt + decode
+                horizon = min(len(req.prompt) + req.max_new, self.max_seq)
+                while len(table) * bt < horizon:
+                    table.append(self.pool.alloc())
+                self._tables[i] = table
+                self._tables_dirty = True
+            elif usable:
                 # jitted gather pool→slot: the whole resident chain lands
                 # in one dispatch, no host round-trip
                 self.cache = self.pool.gather_into(
                     self.cache, i, [n.payload for n in usable])
-                restored = len(usable) * self.store.block_tokens
-            # the last prompt token is always recomputed: its logits seed
-            # generation and were never cached (vLLM does the same)
-            restored = min(restored, len(req.prompt) - 1)
+                self.transfer_dispatches += 1
             req.slot = i
             req.pos = restored
             req.prefill_skipped = restored
@@ -208,46 +318,95 @@ class ServeEngine:
         if not active:
             return []
         feeds: Dict[int, List[int]] = {}
+        use_prev = np.zeros((self.B,), bool)
         for r in active:
             if r.pos < len(r.prompt):                  # prefill phase
                 n = min(self.prefill_chunk, len(r.prompt) - r.pos)
                 feeds[r.slot] = r.prompt[r.pos:r.pos + n]
                 self.prefill_tokens += n
             else:                                      # decode phase
-                feeds[r.slot] = [r.generated[-1] if r.generated
-                                 else r.prompt[-1]]
+                # the feed is the previous step's argmax for this slot —
+                # routed on device, never synced to host
+                feeds[r.slot] = [0]
+                use_prev[r.slot] = True
                 self.decoded_tokens += 1
         S = max(len(f) for f in feeds.values())
         tokens = np.zeros((self.B, S), np.int32)
-        pos = np.zeros((self.B,), np.int32)
-        lens = np.zeros((self.B,), np.int32)
+        meta = np.zeros((3, self.B), np.int32)      # pos / lens / use_prev
+        meta[2] = use_prev
         for r in active:
             f = feeds[r.slot]
             tokens[r.slot, :len(f)] = f
-            pos[r.slot] = r.pos
-            lens[r.slot] = len(f)
-        out_tok, self.cache = self._step_fn(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(pos),
-            jnp.asarray(lens))
-        out = np.asarray(out_tok)
+            meta[0, r.slot] = r.pos
+            meta[1, r.slot] = len(f)
+        args = (self.params,
+                self.pool.buffers if self.paged else self.cache,
+                jnp.asarray(tokens), jnp.asarray(meta))
+        if self.paged:
+            if self._tables_dirty:
+                # attention (and the per-layer page gather on the XLA
+                # path) costs scale with the widest ACTIVE table, not
+                # max_seq — block granularity's other dividend. Bucketed
+                # to multiples of 4 so the jit specializations stay few.
+                nw = max((len(t) for t in self._tables), default=1)
+                nw = min(self.table_width, max(-(-max(nw, 1) // 4) * 4, 4))
+                tables = np.zeros((self.B, nw), np.int32)
+                for r in active:
+                    tab = self._tables[r.slot]
+                    tables[r.slot, :len(tab)] = tab
+                self._tables_dev = jnp.asarray(tables)
+                self._tables_dirty = False
+            args += (self._tables_dev,)
+        out_tok, new_kv = self._step(*args, self._prev_out)
+        if self.paged:
+            self.pool.buffers = new_kv
+        else:
+            self.cache = new_kv
+        self._prev_out = out_tok
         self.steps += 1
+
+        # EOS detection needs every token on host immediately; without it
+        # the readback pipelines and only finishes block (see _materialize)
+        sync = self.eos_id >= 0
+        if sync:
+            out = np.asarray(out_tok)
+            self.readback_syncs += 1
 
         finished: List[Request] = []
         for r in active:
             r.pos += len(feeds[r.slot])
             in_decode = r.pos >= len(r.prompt)
             if in_decode:
-                r.generated.append(int(out[r.slot]))
+                r.n_generated += 1
+                if sync:
+                    r.generated.append(int(out[r.slot]))
+                else:
+                    r._lazy_out.append(out_tok)
             if r.pos == len(r.prompt):
                 self._publish(r)
-            if in_decode and (len(r.generated) >= r.max_new
-                              or (self.eos_id >= 0
-                                  and r.generated[-1] == self.eos_id)):
+            if in_decode and (r.n_generated >= r.max_new
+                              or (sync and r.generated[-1] == self.eos_id)):
+                self._materialize(r)
                 r.done = True
                 finished.append(r)
                 self.store.complete_request(r.prefix_rid)
+                if self.paged:
+                    for idx in self._tables[r.slot]:
+                        self.pool.free(idx)
+                    self._tables[r.slot] = []
+                    self._tables_dirty = True
                 self.slots[r.slot] = None
         return finished
+
+    def _materialize(self, r: Request) -> None:
+        """Drain a request's pipelined token reads into ``generated`` (one
+        blocking device_get for all of them — by finish time the pipeline
+        has usually already computed every step)."""
+        if r._lazy_out:
+            vals = jax.device_get(r._lazy_out)
+            r.generated.extend(int(v[r.slot]) for v in vals)
+            r._lazy_out = []
+            self.readback_syncs += 1
 
     def run(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
@@ -266,6 +425,12 @@ class ServeEngine:
             "pool_blocks": self.pool.num_blocks,
             "pool_blocks_in_use": self.pool.blocks_in_use,
             "pool_high_water": self.pool.high_water,
+            "kv_transfer_dispatches": self.transfer_dispatches,
+            "readback_syncs": self.readback_syncs,
+            "host_syncs_avoided": max(self.steps - self.readback_syncs, 0),
+            "device_kv_bytes": self.pool.nbytes + (
+                0 if self.cache is None else
+                sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))),
             "prefill_saved_frac": (
                 self.prefill_tokens_skipped
                 / max(self.prefill_tokens + self.prefill_tokens_skipped, 1)),

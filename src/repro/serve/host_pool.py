@@ -1,7 +1,7 @@
 """Host-memory KV block pool — tier 1 of the serving data plane.
 
 Mirrors ``serve.kv_pool.KVBlockPool`` on the host side: one preallocated
-numpy buffer per KV cache leaf, shaped ``(num_blocks, *lead, block_tokens,
+numpy buffer per KV cache leaf, shaped ``(*lead, num_blocks, block_tokens,
 KV, D)``, plus a free list of row indices. A demoted prefix-cache block
 occupies ONE row across every leaf, so the tiered store's payloads stay
 single ints in both tiers.
@@ -21,7 +21,7 @@ from typing import List
 import jax
 import numpy as np
 
-from .kv_pool import KVBlockPool, _pool_leaf_shape
+from .kv_pool import KVBlockPool, _pool_leaf_shape, _row_axis
 
 
 class HostBlockPool:
@@ -65,17 +65,26 @@ class HostBlockPool:
     # ------------------------------------------------------------ transfers
     def read_rows(self, idxs: List[int]):
         """Stacked per-leaf copies of rows ``idxs`` (numpy fancy indexing
-        copies) — the host half of a promotion; feed the result to
-        ``KVBlockPool.write_rows``."""
+        copies), row axis leading — the host half of a promotion; feed the
+        result to ``KVBlockPool.write_rows``."""
         sel = np.asarray(idxs, np.int64)
-        return jax.tree.map(lambda hbuf: hbuf[sel], self.buffers)
+
+        def take(hbuf):
+            lead = _row_axis(hbuf)
+            return np.moveaxis(np.take(hbuf, sel, axis=lead), lead, 0)
+
+        return jax.tree.map(take, self.buffers)
 
     def write_rows(self, idxs: List[int], host_blocks) -> None:
         """Store stacked per-leaf block arrays (``KVBlockPool.read_rows``
-        output) into rows ``idxs`` — the host half of a demotion."""
+        output, row axis leading) into rows ``idxs`` — the host half of a
+        demotion."""
         sel = np.asarray(idxs, np.int64)
 
         def put(hbuf, blk):
-            hbuf[sel] = np.asarray(blk, dtype=hbuf.dtype)
+            lead = _row_axis(hbuf)
+            ix = (slice(None),) * lead + (sel,)
+            hbuf[ix] = np.moveaxis(np.asarray(blk, dtype=hbuf.dtype),
+                                   0, lead)
 
         jax.tree.map(put, self.buffers, host_blocks)

@@ -1,25 +1,35 @@
 """Device-resident paged KV block pool.
 
-The serving data plane's block storage: one preallocated device buffer per
-KV cache leaf, shaped ``(num_blocks, *lead, block_tokens, KV, D)`` (with
-``lead`` the leaf's leading layer-stack axes), plus a host-side free list
-of block indices. A ``PrefixStore`` payload is then ONE ``int`` — the pool
-row holding that chain block's KV for every layer — so:
+The serving data plane's ONLY KV storage: one preallocated device buffer
+per KV cache leaf, shaped ``(*lead, num_blocks, block_tokens, KV, D)``
+(with ``lead`` the leaf's leading layer-stack axes — the row axis sits
+right where a per-layer scan slice lands), plus a host-side free list and
+per-row reference counts. A ``PrefixStore`` payload is ONE ``int`` — the
+pool row holding that chain block's KV for every layer.
 
-* a prefix-cache **hit** is a jitted gather pool→slot (one
-  dynamic-update-slice per leaf, the chain is contiguous from position 0);
-* an **insert** is a jitted scatter slot→pool of exactly the fresh blocks;
-* an **eviction** is ``free(idx)`` — O(1), zero copies, and no KV bytes
-  ever round-trip through host memory.
+Two engines share this pool class:
 
-Both transfers are shape-specialized by the number of blocks moved (chain
+* the **paged** engine (PR 5) decodes straight out of the pool via
+  per-slot block tables: a prefix hit is a host-side table write (zero
+  dispatches, zero copies), publish transfers ownership of already-written
+  rows to the store (``share``), and eviction drops a reference — rows are
+  reclaimed when the last referent (store, or an engine slot still reading
+  the row) lets go;
+* the **gather** engine (PR 2, retained as the fallback for non-uniform
+  layer patterns) copies chains pool→slot on a hit (``gather_into``) and
+  slot→pool on publish (``scatter_from``); every row then has exactly one
+  referent and ``free`` is the O(1) reclaim it always was.
+
+Transfers are shape-specialized by the number of blocks moved (chain
 lengths are bounded by ``max_seq / block_tokens``, so the trace cache
-stays small). When the free list runs dry under an unbounded-capacity
+stays small); pool-mutating ops donate the pool buffers so XLA updates
+rows in place. When the free list runs dry under an unbounded-capacity
 store the pool doubles — byte-capacity-driven eviction normally frees
 indices before that happens.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, List, Tuple
 
 import jax
@@ -28,8 +38,13 @@ import jax.numpy as jnp
 
 def _pool_leaf_shape(leaf_shape: Tuple[int, ...], num_blocks: int,
                      block_tokens: int) -> Tuple[int, ...]:
-    """Cache leaf (*lead, B, S, KV, D) -> pool (num_blocks, *lead, bt, KV, D)."""
-    return (num_blocks,) + leaf_shape[:-4] + (block_tokens,) + leaf_shape[-2:]
+    """Cache leaf (*lead, B, S, KV, D) -> pool (*lead, nb, bt, KV, D)."""
+    return leaf_shape[:-4] + (num_blocks, block_tokens) + leaf_shape[-2:]
+
+
+def _row_axis(pbuf) -> int:
+    """The row axis of a pool leaf (after any layer-stack lead axes)."""
+    return pbuf.ndim - 4
 
 
 def chain_block_nbytes(cache_template, block_tokens: int) -> int:
@@ -41,16 +56,15 @@ def chain_block_nbytes(cache_template, block_tokens: int) -> int:
                for leaf in jax.tree.leaves(cache_template))
 
 
-@jax.jit
+@partial(jax.jit, donate_argnums=0)
 def _gather(cache, pool, idxs, slot):
     """Write pool blocks ``idxs`` into ``slot``'s cache rows at token
     positions [0, n*bt) — the restored chain is contiguous from 0."""
 
     def write(leaf, pbuf):
+        lead = _row_axis(pbuf)
         n, bt = idxs.shape[0], pbuf.shape[-3]
-        blocks = pbuf[idxs]                         # (n, *lead, bt, KV, D)
-        lead = blocks.ndim - 4
-        blocks = jnp.moveaxis(blocks, 0, lead)      # (*lead, n, bt, KV, D)
+        blocks = jnp.take(pbuf, idxs, axis=lead)    # (*lead, n, bt, KV, D)
         chain = blocks.reshape(blocks.shape[:lead] + (n * bt,)
                                + blocks.shape[-2:])
         upd = jnp.expand_dims(chain, lead)          # (*lead, 1, n*bt, KV, D)
@@ -63,21 +77,33 @@ def _gather(cache, pool, idxs, slot):
 
 @jax.jit
 def _read_rows(pool, idxs):
-    """Gather pool rows ``idxs`` into one stacked array per leaf — the
-    on-device half of a demotion (the host copy is a single device_get)."""
-    return jax.tree.map(lambda pbuf: pbuf[idxs], pool)
+    """Gather pool rows ``idxs`` into one stacked (n, *lead, bt, KV, D)
+    array per leaf — the on-device half of a demotion (the host copy is a
+    single device_get)."""
+
+    def read(pbuf):
+        lead = _row_axis(pbuf)
+        return jnp.moveaxis(jnp.take(pbuf, idxs, axis=lead), lead, 0)
+
+    return jax.tree.map(read, pool)
 
 
-@jax.jit
+@partial(jax.jit, donate_argnums=0)
 def _write_rows(pool, blocks, idxs):
-    """Scatter stacked per-leaf block arrays into pool rows ``idxs`` — the
-    on-device half of a promotion (host arrays cross in the jit call)."""
-    return jax.tree.map(
-        lambda pbuf, blk: pbuf.at[idxs].set(blk.astype(pbuf.dtype)),
-        pool, blocks)
+    """Scatter stacked (n, *lead, bt, KV, D) block arrays into pool rows
+    ``idxs`` — the on-device half of a promotion (host arrays cross in
+    the jit call)."""
+
+    def write(pbuf, blk):
+        lead = _row_axis(pbuf)
+        ix = (slice(None),) * lead + (idxs,)
+        return pbuf.at[ix].set(jnp.moveaxis(blk, 0, lead)
+                               .astype(pbuf.dtype))
+
+    return jax.tree.map(write, pool, blocks)
 
 
-@jax.jit
+@partial(jax.jit, donate_argnums=1)
 def _scatter(cache, pool, idxs, starts, slot):
     """Read blocks at token offsets ``starts`` from ``slot``'s cache rows
     into pool rows ``idxs`` (fresh blocks need not be contiguous: resident
@@ -85,7 +111,7 @@ def _scatter(cache, pool, idxs, starts, slot):
 
     def read_write(leaf, pbuf):
         bt = pbuf.shape[-3]
-        lead = leaf.ndim - 4
+        lead = _row_axis(pbuf)
         row = jax.lax.dynamic_index_in_dim(leaf, slot, axis=lead,
                                            keepdims=False)
 
@@ -93,13 +119,31 @@ def _scatter(cache, pool, idxs, starts, slot):
             return jax.lax.dynamic_slice_in_dim(row, t0, bt, axis=lead)
 
         blocks = jax.vmap(block_at)(starts)         # (n, *lead, bt, KV, D)
-        return pbuf.at[idxs].set(blocks.astype(pbuf.dtype))
+        ix = (slice(None),) * lead + (idxs,)
+        return pbuf.at[ix].set(jnp.moveaxis(blocks, 0, lead)
+                               .astype(pbuf.dtype))
 
     return jax.tree.map(read_write, cache, pool)
 
 
+@partial(jax.jit, donate_argnums=0)
+def _copy_row(pool, src, dst):
+    """Duplicate pool row ``src`` into ``dst`` — copy-on-write for the
+    paged engine when a fully-resident chain's last block must absorb the
+    recomputed final prompt token without touching the store's copy."""
+
+    def cp(pbuf):
+        lead = _row_axis(pbuf)
+        row = jax.lax.dynamic_index_in_dim(pbuf, src, axis=lead,
+                                           keepdims=True)
+        return jax.lax.dynamic_update_slice_in_dim(pbuf, row, dst,
+                                                   axis=lead)
+
+    return jax.tree.map(cp, pool)
+
+
 class KVBlockPool:
-    """Paged block pool over an engine's KV cache pytree."""
+    """Refcounted paged block pool over an engine's KV cache pytree."""
 
     def __init__(self, cache_template, block_tokens: int,
                  num_blocks: int) -> None:
@@ -111,6 +155,7 @@ class KVBlockPool:
                 leaf.dtype),
             cache_template)
         self.free_list: List[int] = list(range(self.num_blocks - 1, -1, -1))
+        self.refs: List[int] = [0] * self.num_blocks
         self.block_nbytes = chain_block_nbytes(cache_template, block_tokens)
         self.grows = 0
         self.high_water = 0           # max rows ever simultaneously in use
@@ -120,15 +165,34 @@ class KVBlockPool:
         if not self.free_list:
             self._grow()
         idx = self.free_list.pop()
+        self.refs[idx] = 1
         self.high_water = max(self.high_water, self.blocks_in_use)
         return idx
 
+    def share(self, idx: Any) -> int:
+        """Take another reference on a live row (a slot's block table
+        entry, or store ownership at publish). Returns the row."""
+        idx = int(idx)
+        assert self.refs[idx] > 0, f"share of free row {idx}"
+        self.refs[idx] += 1
+        return idx
+
     def free(self, idx: Any) -> None:
-        self.free_list.append(int(idx))
+        """Drop one reference; the row returns to the free list when the
+        last referent (store or engine slot) lets go."""
+        idx = int(idx)
+        self.refs[idx] -= 1
+        assert self.refs[idx] >= 0, f"double free of row {idx}"
+        if self.refs[idx] == 0:
+            self.free_list.append(idx)
 
     @property
     def blocks_in_use(self) -> int:
         return self.num_blocks - len(self.free_list)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.buffers))
 
     def _grow(self) -> None:
         """Double the pool (unbounded-capacity stores never evict, so the
@@ -137,27 +201,34 @@ class KVBlockPool:
         self.num_blocks = old * 2
         self.buffers = jax.tree.map(
             lambda pbuf: jnp.concatenate(
-                [pbuf, jnp.zeros_like(pbuf)], axis=0),
+                [pbuf, jnp.zeros_like(pbuf)], axis=_row_axis(pbuf)),
             self.buffers)
         self.free_list.extend(range(self.num_blocks - 1, old - 1, -1))
+        self.refs.extend([0] * old)
         self.grows += 1
 
     # ------------------------------------------------------------ transfers
     def gather_into(self, cache, slot: int, idxs: List[int]):
         """Restore chain blocks ``idxs`` into ``slot``; returns the updated
-        cache. Device-to-device only."""
+        cache. Device-to-device only. (Gather-engine hit path.)"""
         return _gather(cache, self.buffers,
                        jnp.asarray(idxs, jnp.int32), jnp.int32(slot))
 
     def scatter_from(self, cache, slot: int, block_positions: List[int],
                      idxs: List[int]) -> None:
         """Capture the blocks at chain positions ``block_positions`` of
-        ``slot``'s cache into pool rows ``idxs``. Device-to-device only."""
+        ``slot``'s cache into pool rows ``idxs``. Device-to-device only.
+        (Gather-engine publish path.)"""
         starts = jnp.asarray([p * self.block_tokens
                               for p in block_positions], jnp.int32)
         self.buffers = _scatter(cache, self.buffers,
                                 jnp.asarray(idxs, jnp.int32), starts,
                                 jnp.int32(slot))
+
+    def copy_row(self, src: int, dst: int) -> None:
+        """One-row device copy (paged-engine copy-on-write)."""
+        self.buffers = _copy_row(self.buffers, jnp.int32(src),
+                                 jnp.int32(dst))
 
     # -------------------------------------------- host-tier transfers (PR 4)
     # Like gather/scatter above, both directions shape-specialize on the

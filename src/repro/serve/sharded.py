@@ -64,6 +64,7 @@ class ShardedFrontend:
                  prefill_chunk: int = 8,
                  pool_blocks: Optional[int] = None,
                  host_capacity_bytes: int = 0,
+                 paged: bool = False,
                  record_eviction_log: bool = False) -> None:
         assert n_shards >= 1
         self.n_shards = n_shards
@@ -97,7 +98,7 @@ class ShardedFrontend:
             self.shards.append(ServeEngine(
                 cfg, params, max_slots=max_slots, max_seq=max_seq,
                 store=store, eos_id=eos_id, prefill_chunk=prefill_chunk,
-                pool_blocks=pool_blocks))
+                pool_blocks=pool_blocks, paged=paged))
 
     # ---------------------------------------------------------- coordination
     def _ns(self, shard: int, ident: str) -> str:

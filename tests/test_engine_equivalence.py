@@ -1,5 +1,6 @@
 """End-to-end equivalence: the pooled/chunked engine vs the frozen legacy
-engine, and the pooled store vs the brute-force reference store.
+engine, the pooled store vs the brute-force reference store, and the
+zero-copy paged data plane vs the gather data plane.
 
 The PR 2 data plane changed *representation* (device pool indices instead
 of host arrays; chunked instead of token-at-a-time prefill) but must not
@@ -8,6 +9,13 @@ generation lengths (so the store-op interleaving is chunk-invariant),
 every ``prefill_chunk`` must produce token-identical generations and a
 bit-identical eviction log — and the pooled ``PrefixStore`` must agree
 with ``ReferencePrefixStore`` op-for-op while the engine drives it.
+
+PR 5 changes representation again (block tables + in-pool decode instead
+of gather/scatter + per-slot contiguous caches) with the same obligation,
+and because both planes share one engine control flow, the paged engine
+must match the gather engine *at every* prefill_chunk, policy, tier
+configuration, and shard count — token-identical generations with
+bit-identical eviction logs and ERC counters.
 """
 import jax
 import numpy as np
@@ -16,7 +24,8 @@ import pytest
 from repro import configs
 from repro.models import init_params, model_spec
 from repro.serve import (LegacyServeEngine, PrefixStore,
-                         ReferencePrefixStore, ServeEngine)
+                         ReferencePrefixStore, ServeEngine, ShardedFrontend,
+                         TieredKVStore)
 
 BT = 8          # block_tokens
 PROMPT = 32     # uniform prompt length (4 blocks)
@@ -204,6 +213,98 @@ def test_prefill_step_count_scales_with_chunk(model):
     assert steps[1] == PROMPT
     assert steps[8] == -(-PROMPT // 8)
     assert steps[1] >= 4 * steps[8]
+
+
+def _run_engine(cfg, params, reqs, *, store, chunk, paged, slots=2):
+    eng = ServeEngine(cfg, params, max_slots=slots, max_seq=64, store=store,
+                      prefill_chunk=chunk, paged=paged)
+    rs = [eng.submit(r, max_new=MAX_NEW) for r in reqs]
+    eng.run()
+    return eng, rs
+
+
+@pytest.mark.parametrize("policy", ["lru", "lrc", "lerc"])
+@pytest.mark.parametrize("chunk", [1, 8])
+def test_paged_engine_matches_gather(model, policy, chunk):
+    """The zero-copy paged plane vs the gather plane, same policy and
+    chunk: token-identical generations, bit-identical eviction logs AND
+    incremental ERC counters, identical prefix reuse — and the paged arm
+    must not have issued a single chain-copy dispatch beyond copy-on-write
+    (the workload ends with a duplicate prompt, so the fully-resident-hit
+    CoW path is exercised too)."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    reqs.append(list(reqs[0]))      # full-chain hit -> copy-on-write
+    cap = capacity(cfg, params)
+
+    gst = PrefixStore(cap, policy, block_tokens=BT)
+    geng, greqs = _run_engine(cfg, params, reqs, store=gst, chunk=chunk,
+                              paged=False)
+    pst = PrefixStore(cap, policy, block_tokens=BT)
+    peng, preqs = _run_engine(cfg, params, reqs, store=pst, chunk=chunk,
+                              paged=True)
+
+    assert [r.generated for r in preqs] == [r.generated for r in greqs]
+    assert pst.eviction_log == gst.eviction_log
+    assert [r.prefill_skipped for r in preqs] == \
+        [r.prefill_skipped for r in greqs]
+    assert pst.state.ref_count == gst.state.ref_count
+    assert pst.state.eff_ref_count == gst.state.eff_ref_count
+    assert pst.metrics() == gst.metrics()
+    assert peng.steps == geng.steps
+    # a hit is a host-side block-table write: the only transfer dispatches
+    # the paged plane ever issues are one-row copy-on-write copies
+    assert peng.transfer_dispatches <= 1
+    assert geng.transfer_dispatches > 0
+    # every pool row is reclaimed once the store and the slots let go
+    assert peng.pool.blocks_in_use == \
+        sum(1 for n in pst._nodes.values() if n.resident) + 1  # junk row
+
+
+def test_paged_tiered_promotion_into_block_tables(model):
+    """TieredKVStore under the paged plane: demoted chains promote back
+    into pool rows that prefix hits then reference via block tables —
+    token-identical to the gather plane with the same tier config, same
+    eviction/demotion/promotion stream."""
+    cfg, params = model
+    reqs = workload(cfg.vocab, n_requests=10, n_families=2, seed=3)
+    blk = capacity(cfg, params) // 10
+    results = {}
+    for paged in (False, True):
+        st = TieredKVStore(blk * 6, "lerc", block_tokens=BT,
+                           host_capacity_bytes=blk * 64)
+        eng, rs = _run_engine(cfg, params, reqs, store=st, chunk=8,
+                              paged=paged)
+        results[paged] = (rs, st)
+    (grs, gst), (prs, pst) = results[False], results[True]
+    assert pst.metrics_obj.promotions > 0, "workload exercised no promotion"
+    assert [r.generated for r in prs] == [r.generated for r in grs]
+    assert pst.eviction_log == gst.eviction_log
+    assert pst.host_eviction_log == gst.host_eviction_log
+    assert pst.metrics_obj.demotions == gst.metrics_obj.demotions
+    assert pst.metrics_obj.promotions == gst.metrics_obj.promotions
+
+
+def test_paged_sharded_matches_gather_sharded(model):
+    """2-shard frontend, paged vs gather shards: token-identical, same
+    per-shard eviction logs, replicas coherent."""
+    cfg, params = model
+    reqs = workload(cfg.vocab, n_requests=10, seed=5)
+    cap = capacity(cfg, params)
+    results = {}
+    for paged in (False, True):
+        fe = ShardedFrontend(cfg, params, 2, max_slots=2, max_seq=64,
+                             capacity_bytes=cap, policy="lerc",
+                             block_tokens=BT, prefill_chunk=8, paged=paged)
+        rs = [fe.submit(r, max_new=MAX_NEW)[1] for r in reqs]
+        fe.run()
+        fe.verify_replicas()
+        results[paged] = (rs, fe)
+    (grs, gfe), (prs, pfe) = results[False], results[True]
+    assert [r.generated for r in prs] == [r.generated for r in grs]
+    for ge, pe in zip(gfe.shards, pfe.shards):
+        assert pe.store.eviction_log == ge.store.eviction_log
+        assert pe.paged and not ge.paged
 
 
 def test_pool_reclaims_evicted_blocks(model):
