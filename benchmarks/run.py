@@ -5,7 +5,7 @@ Usage:
     PYTHONPATH=src python -m benchmarks.run                # everything
     PYTHONPATH=src python -m benchmarks.run fig5           # one benchmark
     PYTHONPATH=src python -m benchmarks.run --toy \
-        --json BENCH_5.json serve_throughput               # CI artifact
+        serve_throughput serve_latency --json              # CI artifact
 
 ``--json PATH`` collects every executed benchmark's saved result rows
 (benchmarks/results/<name>.json) into one artifact, so the perf
@@ -40,9 +40,11 @@ def main(argv=None) -> None:
                     help="benchmark names (default: all)")
     ap.add_argument("--toy", action="store_true",
                     help="CI scale for benchmarks that support it")
-    ap.add_argument("--json", default=None, metavar="PATH",
+    ap.add_argument("--json", nargs="?", default=None,
+                    const="BENCH_6.json", metavar="PATH",
                     help="write one artifact collecting every executed "
-                         "benchmark's result rows")
+                         "benchmark's result rows (default path when the "
+                         "flag is bare: BENCH_6.json at the repo root)")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
 
     from . import fig3_all_or_nothing, fig5_makespan, fig6_fig7_hit_ratios
@@ -61,6 +63,7 @@ def main(argv=None) -> None:
                      ("eviction_scaling", "eviction_scaling"),
                      ("prefix_cache_bench", "prefix_cache"),
                      ("serve_throughput", "serve_throughput"),
+                     ("serve_latency", "serve_latency"),
                      ("tiered_serve", "tiered_serve"),
                      ("coordination_overhead", "coordination_overhead"),
                      ("pipeline_bench", "pipeline"),

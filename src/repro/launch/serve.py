@@ -2,6 +2,17 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
       --requests 12 --policy lerc
+
+With ``--arrival`` the run goes through the always-on front door instead
+of the batch loop: requests arrive on a timed trace (Poisson / bursty /
+diurnal, seeded), the chosen ``--scheduler`` divides each step's prefill
+work against decode latency, per-request TTFT deadlines come from
+``--deadline-ms``, and the report adds TTFT/TPOT percentiles and
+goodput-under-deadline on the deterministic virtual clock:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
+      --scheduler budgeted --prefill-budget 16 --arrival poisson \
+      --arrival-rate 2.0 --deadline-ms 8 --max-queue 64
 """
 from __future__ import annotations
 
@@ -15,7 +26,13 @@ import numpy as np
 from .. import configs
 from ..core import POLICIES
 from ..models import init_params, model_spec
-from ..serve import PrefixStore, ServeEngine, ShardedFrontend, TieredKVStore
+from ..serve import (BudgetedScheduler, PrefixStore, ServeEngine,
+                     ShardedFrontend, TieredKVStore, TracedRequest,
+                     latency_stats, play_trace)
+from ..sim import bursty_arrivals, diurnal_arrivals, poisson_arrivals
+
+_ARRIVALS = {"poisson": poisson_arrivals, "bursty": bursty_arrivals,
+             "diurnal": diurnal_arrivals}
 
 
 def serve_main(argv=None) -> int:
@@ -56,6 +73,28 @@ def serve_main(argv=None) -> int:
                     help="cache shards: >1 runs a ShardedFrontend of "
                          "independent engines on the coordination plane, "
                          "splitting --cache-kb across shards")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=["fcfs", "decode-first", "budgeted"],
+                    help="step scheduler: fcfs (full-chunk prefill for "
+                         "every slot), decode-first (prefill only on "
+                         "decode-idle steps), budgeted (earliest-deadline-"
+                         "first prefill under --prefill-budget)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prompt tokens per step for the budgeted "
+                         "scheduler (None = uncapped, 0 = decode-first)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request TTFT deadline on the virtual clock "
+                         "(None = best-effort; goodput counts completions)")
+    ap.add_argument("--arrival", default=None,
+                    choices=sorted(_ARRIVALS),
+                    help="drive requests through the timed front door "
+                         "with this arrival process instead of the "
+                         "batch submit-then-run loop")
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="mean arrivals per virtual time unit")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission-control queue bound (per shard); "
+                         "arrivals past it are shed with QueueFull")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -74,6 +113,10 @@ def serve_main(argv=None) -> int:
               "recurrent layers; clamping --prefill-chunk to 1",
               file=sys.stderr)
         args.prefill_chunk = 1
+    # schedulers are stateless policy objects — one instance is safely
+    # shared by every shard
+    scheduler = (BudgetedScheduler(args.prefill_budget)
+                 if args.scheduler == "budgeted" else args.scheduler)
     if args.shards > 1:
         eng = ShardedFrontend(
             cfg, params, args.shards, max_slots=args.slots,
@@ -82,7 +125,8 @@ def serve_main(argv=None) -> int:
             policy=args.policy, block_tokens=args.block_tokens,
             prefill_chunk=args.prefill_chunk, pool_blocks=args.pool_blocks,
             host_capacity_bytes=host_bytes // args.shards,
-            paged=args.paged)
+            paged=args.paged, scheduler=scheduler,
+            max_queue=args.max_queue)
     else:
         if host_bytes > 0:
             store: PrefixStore = TieredKVStore(
@@ -96,7 +140,8 @@ def serve_main(argv=None) -> int:
         eng = ServeEngine(cfg, params, max_slots=args.slots,
                           max_seq=args.max_seq, store=store,
                           prefill_chunk=args.prefill_chunk,
-                          pool_blocks=args.pool_blocks, paged=args.paged)
+                          pool_blocks=args.pool_blocks, paged=args.paged,
+                          scheduler=scheduler, max_queue=args.max_queue)
 
     if host_bytes > 0:
         # a host budget below one KV block (per shard) sizes the pool to
@@ -113,20 +158,36 @@ def serve_main(argv=None) -> int:
     n_families = max(args.requests // 4, 1)
     prefixes = [list(rng.integers(0, cfg.vocab, args.shared_prefix))
                 for _ in range(n_families)]
+    prompts = [prefixes[i % n_families]
+               + list(rng.integers(0, cfg.vocab, 8))
+               for i in range(args.requests)]
     t0 = time.time()
-    for i in range(args.requests):
-        pfx = prefixes[i % n_families]
-        sfx = list(rng.integers(0, cfg.vocab, 8))
-        eng.submit(pfx + sfx, max_new=args.max_new)
-    eng.run()
+    report = None
+    if args.arrival is not None:
+        times = _ARRIVALS[args.arrival](args.requests, args.arrival_rate,
+                                        args.seed)
+        trace = [TracedRequest(t=t, prompt=p, max_new=args.max_new,
+                               deadline=args.deadline_ms)
+                 for t, p in zip(times, prompts)]
+        report = play_trace(eng, trace)
+    else:
+        for p in prompts:
+            eng.submit(p, max_new=args.max_new)
+        eng.run()
     if args.shards > 1:
         eng.verify_replicas()       # smoke doubles as a coherence proof
     m = eng.metrics()
+    if report is not None:
+        m.update(latency_stats(report))
     paged_on = (all(e.paged for e in eng.shards) if args.shards > 1
                 else eng.paged)
     print(f"policy={args.policy}  shards={args.shards}  "
           f"paged={'on' if paged_on else 'off'}  "
-          f"host_cache_kb={args.host_cache_kb}  wall={time.time()-t0:.1f}s")
+          f"scheduler={args.scheduler}"
+          + (f"  arrival={args.arrival}@{args.arrival_rate}"
+             if args.arrival else "")
+          + f"  host_cache_kb={args.host_cache_kb}  "
+          f"wall={time.time()-t0:.1f}s")
     for k, v in m.items():
         print(f"  {k:26s} {v:.3f}" if isinstance(v, float)
               else f"  {k:26s} {v}")

@@ -9,18 +9,32 @@ the fallback for non-absolute-position layer patterns, and chunked
 prefill rides both. ``TieredKVStore`` + ``HostBlockPool`` add core's
 two-tier semantics: device-pressure victims demote to a host-memory tier
 and promote back on reuse instead of being recomputed.
-``LegacyServeEngine`` and ``ReferencePrefixStore`` are the frozen
-pre-optimization baselines the equivalence tests and benchmarks measure
-against."""
+The front door (PR 6) makes the tier always-on: ``scheduler`` policies
+({fcfs, decode-first, budgeted}) divide each step's prefill work against
+decode latency, ``play_trace`` drives an engine or frontend from a timed
+arrival trace with admission control (``QueueFull`` backpressure) and
+per-request deadlines, and ``latency_stats`` reports TTFT/TPOT
+percentiles + goodput-under-deadline on the deterministic virtual clock
+(``StepCostModel``). ``LegacyServeEngine`` and ``ReferencePrefixStore``
+are the frozen pre-optimization baselines the equivalence tests and
+benchmarks measure against."""
 from .engine import Request, ServeEngine
 from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool
 from .legacy import LegacyServeEngine
 from .prefix_store import Node, PrefixStore
 from .reference import ReferencePrefixStore
+from .scheduler import (BudgetedScheduler, DecodeFirstScheduler,
+                        FCFSScheduler, QueueFull, Scheduler, StepCostModel,
+                        TracedRequest, TraceReport, latency_stats,
+                        make_scheduler, play_trace)
 from .sharded import ShardedFrontend, route_prefix
 from .tiered import TieredKVStore
 
 __all__ = ["Request", "ServeEngine", "LegacyServeEngine", "KVBlockPool",
            "HostBlockPool", "Node", "PrefixStore", "ReferencePrefixStore",
-           "ShardedFrontend", "TieredKVStore", "route_prefix"]
+           "ShardedFrontend", "TieredKVStore", "route_prefix",
+           "Scheduler", "FCFSScheduler", "DecodeFirstScheduler",
+           "BudgetedScheduler", "make_scheduler", "StepCostModel",
+           "QueueFull", "TracedRequest", "TraceReport", "play_trace",
+           "latency_stats"]

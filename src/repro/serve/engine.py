@@ -47,7 +47,7 @@ import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from functools import lru_cache
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,7 @@ from ..models.common import ModelConfig
 from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool, chain_block_nbytes
 from .prefix_store import PrefixStore
+from .scheduler import QueueFull, Scheduler, StepCostModel, make_scheduler
 from .tiered import TieredKVStore
 
 # pool rows a default-constructed engine starts with when the store's byte
@@ -66,35 +67,50 @@ _DEFAULT_POOL_BLOCKS = 256
 
 
 @lru_cache(maxsize=None)
-def _step_fn(cfg: ModelConfig, paged: bool):
-    """One shared jitted step per (hashable) config and data plane:
-    engines spun up on the same model reuse every compiled (B, S)
+def _step_fn(cfg: ModelConfig, paged: bool, eos_id: int):
+    """One shared jitted step per (hashable) config, data plane, and EOS
+    id: engines spun up on the same model reuse every compiled (B, S)
     specialization instead of retracing behind a fresh closure. The KV
     argument (per-slot cache or pool buffers) is donated so XLA updates
     it in place; ``prev``/``use_prev`` route the previous step's argmax
-    into decode feeds without a host round-trip."""
+    into decode feeds without a host round-trip.
+
+    ``done`` is the device-side finished mask (PR 6): when EOS detection
+    is on, the mask accumulates ``emitted-token == eos_id`` per slot *on
+    device*, so the engine only syncs the (B,) mask every
+    ``eos_interval`` steps instead of the whole token vector every step —
+    EOS mode rides the readback pipeline like everything else."""
 
     # meta rows: 0 = per-slot position, 1 = real tokens this step,
-    # 2 = route the previous argmax into column 0 (decode feed) — packed
-    # into ONE (3, B) host→device upload per step
+    # 2 = route the previous argmax into column 0 (decode feed),
+    # 3 = this step's output counts as a generated token (EOS-eligible),
+    # 4 = clear the slot's done bit (slot re-admitted) — packed into ONE
+    # (5, B) host→device upload per step
+    def _advance(out_tok, meta, done):
+        if eos_id < 0:
+            return done
+        emit = meta[3].astype(bool)
+        reset = meta[4].astype(bool)
+        return (done & ~reset) | (emit & (out_tok == eos_id))
+
     if paged:
-        def _step(p, pool, t, meta, tables, prev):
+        def _step(p, pool, t, meta, tables, prev, done):
             pos, lens, use_prev = meta[0], meta[1], meta[2].astype(bool)
             t = t.at[:, 0].set(jnp.where(use_prev, prev, t[:, 0]))
             logits, new_pool = decode_step(cfg, p, pool, t, pos,
                                            seq_lens=lens,
                                            paged_tables=tables)
-            return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), \
-                new_pool
+            out = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return out, new_pool, _advance(out, meta, done)
 
         return jax.jit(_step, donate_argnums=(1,))
 
-    def _step(p, c, t, meta, prev):
+    def _step(p, c, t, meta, prev, done):
         pos, lens, use_prev = meta[0], meta[1], meta[2].astype(bool)
         t = t.at[:, 0].set(jnp.where(use_prev, prev, t[:, 0]))
         logits, new_cache = decode_step(cfg, p, c, t, pos, seq_lens=lens)
-        return jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32), \
-            new_cache
+        out = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return out, new_cache, _advance(out, meta, done)
 
     return jax.jit(_step, donate_argnums=(1,))
 
@@ -112,6 +128,12 @@ class Request:
                                     # pipelined readback materializes lazily)
     prefill_skipped: int = 0
     done: bool = False
+    cancelled: bool = False
+    # front-door timing, on the engine's virtual clock (scheduler SLOs)
+    arrival: float = 0.0
+    deadline: Optional[float] = None    # absolute TTFT deadline, or None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
     # un-synced per-step token vectors (pipelined readback)
     _lazy_out: List = field(default_factory=list, repr=False)
 
@@ -135,7 +157,11 @@ class ServeEngine:
                  max_seq: int = 256, store: Optional[PrefixStore] = None,
                  eos_id: int = -1, prefill_chunk: int = 8,
                  pool_blocks: Optional[int] = None,
-                 paged: bool = False) -> None:
+                 paged: bool = False,
+                 scheduler: Union[str, Scheduler, None] = None,
+                 max_queue: Optional[int] = None,
+                 clock: Optional[StepCostModel] = None,
+                 eos_interval: int = 8) -> None:
         template = init_decode_cache(cfg, 1, 8)
         for path, _ in _kv_leaves(template):
             assert path[-1] in ("k", "v"), (
@@ -209,24 +235,89 @@ class ServeEngine:
         else:
             self.store.evict_payload = self.pool.free
 
-        self._step = _step_fn(cfg, self.paged)
+        self._step = _step_fn(cfg, self.paged, eos_id)
         self._prev_out = jnp.zeros((self.B,), jnp.int32)
+        self._done_dev = jnp.zeros((self.B,), bool)
         self._rid = itertools.count(1)
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * self.B
+        # ----- front door (PR 6): step scheduling, admission control, and
+        # a deterministic virtual clock for SLO accounting. The default
+        # FCFS scheduler reproduces the pre-scheduler step loop exactly.
+        self.scheduler = (make_scheduler(scheduler)
+                          if isinstance(scheduler, str)
+                          else scheduler or Scheduler())
+        self.max_queue = max_queue
+        self.clock = clock or StepCostModel()
+        if getattr(self.scheduler, "clock", False) is None:
+            # cost-aware schedulers price chunks on the engine's own clock
+            self.scheduler.clock = self.clock
+        self.now = 0.0
+        self.eos_interval = max(int(eos_interval), 1)
+        self._fresh_slots: set = set()  # admitted since the last dispatch
         self.steps = 0
         self.decoded_tokens = 0
         self.prefill_tokens = 0
         self.prefill_tokens_skipped = 0
         self.transfer_dispatches = 0    # gather/scatter/copy-on-write
         self.readback_syncs = 0         # device→host blocking reads
+        self.rejected = 0               # backpressure sheds
+        self.cancellations = 0
 
     # ------------------------------------------------------------- requests
-    def submit(self, prompt: Sequence[int], max_new: int = 16) -> Request:
-        req = Request(next(self._rid), list(prompt), max_new)
+    def submit(self, prompt: Sequence[int], max_new: int = 16, *,
+               deadline: Optional[float] = None,
+               arrival: Optional[float] = None) -> Request:
+        """Enqueue a request. ``deadline`` is an *absolute* TTFT deadline
+        on the engine's virtual clock (None = best-effort); ``arrival``
+        backdates the request to its true arrival time when a trace loop
+        submits it a fraction of a step late. Raises ``QueueFull`` when
+        admission control is on and the queue is at ``max_queue``."""
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.rejected += 1
+            raise QueueFull(f"queue at max_queue={self.max_queue}")
+        req = Request(next(self._rid), list(prompt), max_new,
+                      arrival=self.now if arrival is None else arrival,
+                      deadline=deadline)
         req.prefix_rid = self.store.register_request(prompt)
         self.queue.append(req)
         return req
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a request at any point in its lifetime — queued,
+        prefilling, or mid-decode. Frees the slot and (paged plane) the
+        slot's block-table rows *immediately*: tail rows return to the
+        pool, shared store rows drop the slot's reference, and the
+        store's pending-chain references retire so eviction stops
+        protecting the abandoned chain. Tokens already computed remain
+        readable on the returned request. Call between steps."""
+        if req.done:
+            return False
+        req.done = True
+        req.cancelled = True
+        self.cancellations += 1
+        if req.slot >= 0 and self.slots[req.slot] is req:
+            self._release_slot(req)
+        else:
+            try:
+                self.queue.remove(req)
+            except ValueError:
+                pass
+        self.store.complete_request(req.prefix_rid)
+        self._drain(req)
+        req.finished_at = self.now
+        return True
+
+    def drain(self, req: Request) -> List[int]:
+        """Streaming read: materialize every token computed so far (one
+        blocking device_get) and return the visible generation. Safe at
+        any step; with EOS detection on, tokens past the first EOS are
+        not shown."""
+        self._drain(req)
+        gen = req.generated
+        if self.eos_id >= 0 and self.eos_id in gen:
+            gen = gen[:gen.index(self.eos_id) + 1]
+        return list(gen)
 
     # -------------------------------------------------------- cache plumbing
     def _block_nbytes(self) -> int:
@@ -269,7 +360,13 @@ class ServeEngine:
         for i in range(self.B):
             if self.slots[i] is not None or not self.queue:
                 continue
-            req = self.queue.popleft()
+            pick = self.scheduler.admit_idx(self.queue)
+            if pick == 0:
+                req = self.queue.popleft()
+            else:
+                req = self.queue[pick]
+                del self.queue[pick]
+            self._fresh_slots.add(i)
             usable = self.store.lookup(req.prompt)
             if not self.restore_prefix:
                 usable = []             # hit metrics recorded; no restore
@@ -310,35 +407,56 @@ class ServeEngine:
 
     # ----------------------------------------------------------------- step
     def step(self) -> List[Request]:
-        """One engine iteration — up to ``prefill_chunk`` prompt tokens per
-        prefilling slot, one token per decoding slot, all in a single
-        batched dispatch. Returns requests that finished."""
+        """One engine iteration. Decode slots pack first (one pipelined
+        token each); the scheduler then divides this step's prefill work —
+        up to ``prefill_chunk`` tokens per prefilling slot under FCFS, a
+        deadline-ordered token budget under the budgeted scheduler (slots
+        it preempts idle for the step) — all in a single batched dispatch.
+        Returns requests that finished."""
         self._admit()
         active = [r for r in self.slots if r is not None]
         if not active:
             return []
+        decoding = [r for r in active if r.pos >= len(r.prompt)]
+        prefilling = [r for r in active if r.pos < len(r.prompt)]
+        plan = self.scheduler.plan_prefill(prefilling, self.prefill_chunk,
+                                           len(decoding))
+        plan = {s: n for s, n in plan.items() if n > 0}
+        if not decoding and not plan and prefilling:
+            # never stall a step that has only prefill work: feed the
+            # scheduler's most urgent slot its chunk (a zero budget means
+            # "prefill only when decode is idle", not "never prefill")
+            r = prefilling[0]
+            plan = {r.slot: min(self.prefill_chunk,
+                                len(r.prompt) - r.pos)}
         feeds: Dict[int, List[int]] = {}
         use_prev = np.zeros((self.B,), bool)
-        for r in active:
-            if r.pos < len(r.prompt):                  # prefill phase
-                n = min(self.prefill_chunk, len(r.prompt) - r.pos)
+        for r in decoding:
+            # the feed is the previous step's argmax for this slot —
+            # routed on device, never synced to host
+            feeds[r.slot] = [0]
+            use_prev[r.slot] = True
+            self.decoded_tokens += 1
+        for r in prefilling:
+            n = plan.get(r.slot, 0)
+            if n:                      # preempted slots idle this step
                 feeds[r.slot] = r.prompt[r.pos:r.pos + n]
                 self.prefill_tokens += n
-            else:                                      # decode phase
-                # the feed is the previous step's argmax for this slot —
-                # routed on device, never synced to host
-                feeds[r.slot] = [0]
-                use_prev[r.slot] = True
-                self.decoded_tokens += 1
+        fed = [r for r in active if r.slot in feeds]
         S = max(len(f) for f in feeds.values())
         tokens = np.zeros((self.B, S), np.int32)
-        meta = np.zeros((3, self.B), np.int32)      # pos / lens / use_prev
+        # meta rows: pos / lens / use_prev / emits-generated / reset-done
+        meta = np.zeros((5, self.B), np.int32)
         meta[2] = use_prev
-        for r in active:
+        for r in fed:
             f = feeds[r.slot]
             tokens[r.slot, :len(f)] = f
             meta[0, r.slot] = r.pos
             meta[1, r.slot] = len(f)
+            meta[3, r.slot] = r.pos + len(f) >= len(r.prompt)
+        for i in self._fresh_slots:
+            meta[4, i] = 1
+        self._fresh_slots.clear()
         args = (self.params,
                 self.pool.buffers if self.paged else self.cache,
                 jnp.asarray(tokens), jnp.asarray(meta))
@@ -357,48 +475,76 @@ class ServeEngine:
                 self._tables_dev = jnp.asarray(tables)
                 self._tables_dirty = False
             args += (self._tables_dev,)
-        out_tok, new_kv = self._step(*args, self._prev_out)
+        out_tok, new_kv, self._done_dev = self._step(*args, self._prev_out,
+                                                     self._done_dev)
         if self.paged:
             self.pool.buffers = new_kv
         else:
             self.cache = new_kv
         self._prev_out = out_tok
         self.steps += 1
-
-        # EOS detection needs every token on host immediately; without it
-        # the readback pipelines and only finishes block (see _materialize)
-        sync = self.eos_id >= 0
-        if sync:
-            out = np.asarray(out_tok)
-            self.readback_syncs += 1
+        # prefill attention reads this step: a prompt chunk of ``lens``
+        # tokens attends over a context ending at pos + lens, so late
+        # chunks of a long prompt are the expensive ones (decode-side
+        # attention is memory-bound and folded into per_token)
+        pre = (meta[2] == 0) & (meta[1] > 0)
+        attn_pairs = int((meta[1] * (meta[0] + meta[1]) * pre).sum())
+        self.now += float(self.clock(int(meta[1].sum()) - len(decoding),
+                                     len(decoding), attn_pairs))
 
         finished: List[Request] = []
-        for r in active:
+        for r in fed:
             r.pos += len(feeds[r.slot])
             in_decode = r.pos >= len(r.prompt)
             if in_decode:
                 r.n_generated += 1
-                if sync:
-                    r.generated.append(int(out[r.slot]))
-                else:
-                    r._lazy_out.append(out_tok)
+                r._lazy_out.append(out_tok)
+                if r.n_generated == 1:
+                    r.first_token_at = self.now
             if r.pos == len(r.prompt):
                 self._publish(r)
-            if in_decode and (r.n_generated >= r.max_new
-                              or (sync and r.generated[-1] == self.eos_id)):
-                self._materialize(r)
-                r.done = True
+            if in_decode and r.n_generated >= r.max_new:
+                self._finish(r)
                 finished.append(r)
-                self.store.complete_request(r.prefix_rid)
-                if self.paged:
-                    for idx in self._tables[r.slot]:
-                        self.pool.free(idx)
-                    self._tables[r.slot] = []
-                    self._tables_dirty = True
-                self.slots[r.slot] = None
+        if self.eos_id >= 0 and decoding \
+                and self.steps % self.eos_interval == 0:
+            # device-side EOS detection: one (B,) bool sync per interval
+            # instead of the whole token vector every step. A slot that
+            # hit EOS between checks decoded a few garbage tokens past it
+            # — _finish truncates them — in exchange for pipelined steps.
+            done = np.asarray(jax.device_get(self._done_dev))
+            self.readback_syncs += 1
+            for r in decoding:
+                if not r.done and done[r.slot]:
+                    self._finish(r)
+                    finished.append(r)
         return finished
 
-    def _materialize(self, r: Request) -> None:
+    def _finish(self, r: Request) -> None:
+        """Complete a request: drain pipelined tokens, truncate at the
+        first EOS, retire the store chain, release the slot."""
+        self._drain(r)
+        if self.eos_id >= 0 and self.eos_id in r.generated:
+            r.generated = r.generated[:r.generated.index(self.eos_id) + 1]
+        r.n_generated = len(r.generated)
+        r.done = True
+        r.finished_at = self.now
+        self.store.complete_request(r.prefix_rid)
+        self._release_slot(r)
+
+    def _release_slot(self, r: Request) -> None:
+        """Free a slot's engine-side resources *now* (finish or cancel):
+        on the paged plane every block-table row drops the slot's
+        reference — private tail rows return to the pool immediately,
+        store-shared rows survive on the store's own reference."""
+        if self.paged:
+            for idx in self._tables[r.slot]:
+                self.pool.free(idx)
+            self._tables[r.slot] = []
+            self._tables_dirty = True
+        self.slots[r.slot] = None
+
+    def _drain(self, r: Request) -> None:
         """Drain a request's pipelined token reads into ``generated`` (one
         blocking device_get for all of them — by finish time the pipeline
         has usually already computed every step)."""
@@ -427,6 +573,9 @@ class ServeEngine:
             "pool_high_water": self.pool.high_water,
             "kv_transfer_dispatches": self.transfer_dispatches,
             "readback_syncs": self.readback_syncs,
+            "virtual_time": self.now,
+            "rejected": self.rejected,
+            "cancellations": self.cancellations,
             "host_syncs_avoided": max(self.steps - self.readback_syncs, 0),
             "device_kv_bytes": self.pool.nbytes + (
                 0 if self.cache is None else

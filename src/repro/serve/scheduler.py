@@ -1,0 +1,312 @@
+"""Deadline-aware step scheduling for the serve front door (PR 6).
+
+The engine's step loop asks a ``Scheduler`` two questions:
+
+* **admission** — when a slot frees, *which* queued request takes it
+  (``admit_idx``): FIFO for the baseline schedulers, earliest-deadline-
+  first for the budgeted one;
+* **prefill planning** — how many prompt tokens each prefilling slot may
+  feed *this step* (``plan_prefill``). Decode slots are always packed
+  first by the engine (one token each, pipelined feeds); the scheduler
+  only divides the step's *prefill* work.
+
+Three policies:
+
+* ``fcfs`` — every prefilling slot feeds its full chunk every step. This
+  is exactly the pre-scheduler engine behavior (and is the default), so a
+  scheduled engine degrades bit-identically to the old ``run()`` loop —
+  ``tests/test_engine_equivalence.py`` proves it.
+* ``decode-first`` — prefill runs only on steps with no decode work:
+  TPOT is never taxed by prefill, TTFT starves behind long decodes. One
+  extreme of the tradeoff the budgeted scheduler navigates.
+* ``budgeted`` — each step spends at most ``prefill_budget`` prompt
+  tokens, allocated earliest-deadline-first across prefilling slots
+  (ties: arrival order). A long prefill is *preempted* — fed zero tokens
+  — whenever more urgent prompts exhaust the budget, so a new arrival's
+  TTFT and the decode slots' TPOT are both bounded by
+  ``base + per_token * (budget + decode_slots)`` per step instead of
+  ``per_token * (slots * chunk)``.
+
+Because greedy decoding with KV-exact prefix restore makes a request's
+tokens independent of *when* its chunks are scheduled, all three policies
+produce token-identical generations — scheduling moves latency, never
+text. Eviction logs may legitimately differ (store ops reorder).
+
+Time is **virtual**: the engine advances its clock by ``StepCostModel``
+per step (affine in the tokens dispatched), so scheduled runs, TTFT/TPOT
+percentiles, and goodput are deterministic under a seeded arrival trace —
+on CI CPU as on a TPU pod. ``play_trace`` is the front-door event loop
+that drives an engine (or a ``ShardedFrontend``, per-shard queues) from a
+timed arrival trace with admission control and backpressure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+class QueueFull(RuntimeError):
+    """Backpressure: the engine's admission queue is at ``max_queue``."""
+
+
+@dataclass(frozen=True)
+class StepCostModel:
+    """Virtual wall-clock of one engine step: fixed dispatch/host overhead
+    (``base``), per-token MLP/projection FLOPs (``per_token``), and — when
+    ``per_attn`` is nonzero — the attention term, linear in KV *pairs*
+    read this step (Σ over slots of tokens_fed × context_length). The
+    attention term is what makes a long prompt's late prefill chunks
+    disproportionately expensive, and therefore what a deadline-aware
+    scheduler can keep off the steps interactive requests share (the
+    stall-free-batching observation). Units are abstract milliseconds;
+    the *ratios* between schedulers, not the absolute numbers, are the
+    measurement."""
+    base: float = 0.25
+    per_token: float = 0.05
+    per_attn: float = 0.0
+
+    def __call__(self, prefill_tokens: int, decode_tokens: int,
+                 attn_pairs: int = 0) -> float:
+        return (self.base
+                + self.per_token * (prefill_tokens + decode_tokens)
+                + self.per_attn * attn_pairs)
+
+
+def _deadline_key(r):
+    """EDF order: requests with deadlines first (earliest first), then
+    arrival order; rid breaks exact ties deterministically."""
+    return (r.deadline is None,
+            r.deadline if r.deadline is not None else 0.0,
+            r.arrival, r.rid)
+
+
+class Scheduler:
+    """Base policy = FCFS admission + full-chunk prefill for everyone."""
+
+    name = "fcfs"
+
+    def admit_idx(self, queue: Sequence) -> int:
+        """Index into ``queue`` of the request that takes the free slot."""
+        return 0
+
+    def plan_prefill(self, prefilling: List, chunk: int, n_decode: int
+                     ) -> Dict[int, int]:
+        """slot -> prompt tokens to feed this step (omitted slots idle).
+        ``prefilling`` holds the active prefill-phase requests in slot
+        order; the engine has already packed ``n_decode`` decode slots
+        (one token each) into the same dispatch."""
+        return {r.slot: min(chunk, len(r.prompt) - r.pos)
+                for r in prefilling}
+
+
+class FCFSScheduler(Scheduler):
+    pass
+
+
+class DecodeFirstScheduler(Scheduler):
+    """Strict decode priority: prefill only on steps with no decode
+    work — TPOT is never taxed by prefill, TTFT starves behind decodes."""
+
+    name = "decode-first"
+
+    def plan_prefill(self, prefilling, chunk, n_decode):
+        if n_decode > 0:
+            return {}
+        return super().plan_prefill(prefilling, chunk, n_decode)
+
+
+class BudgetedScheduler(Scheduler):
+    """Deadline-aware prefill budgeting: decode packs first, then up to
+    ``prefill_budget`` prompt tokens are spent earliest-deadline-first
+    across prefilling slots; slots past the budget are preempted (fed 0).
+    ``prefill_budget=None`` removes the cap (degrades to FCFS planning);
+    ``prefill_budget=0`` degrades to strict decode-first.
+
+    When the engine's ``StepCostModel`` has a nonzero attention term, a
+    chunk is charged its *cost-equivalent* tokens — ``n`` tokens at
+    context position ``p`` cost like ``n * (1 + (per_attn/per_token) *
+    (p+n))`` flat ones — so the late, expensive chunks of a long prompt
+    automatically shrink to fit the budget. That bounds every step at
+    ``~base + per_token*(budget + decodes)`` regardless of how deep into
+    a long context a slot is, which is the whole point: TPOT and new
+    arrivals' TTFT never inherit a long prefill's attention bill. (The
+    engine wires its own clock in when the scheduler doesn't carry one.)"""
+
+    name = "budgeted"
+
+    def __init__(self, prefill_budget: Optional[int] = None,
+                 clock: Optional[StepCostModel] = None) -> None:
+        self.prefill_budget = prefill_budget
+        self.clock = clock
+
+    def admit_idx(self, queue):
+        best, best_key = 0, None
+        for i, r in enumerate(queue):
+            k = _deadline_key(r)
+            if best_key is None or k < best_key:
+                best, best_key = i, k
+        return best
+
+    def _eff_tokens(self, n: int, pos: int) -> int:
+        """Cost-equivalent flat tokens of an ``n``-token chunk whose
+        context ends at ``pos + n``."""
+        c = self.clock
+        if n <= 0 or c is None or not c.per_attn or not c.per_token:
+            return n
+        return n + int(round(c.per_attn * n * (pos + n) / c.per_token))
+
+    def plan_prefill(self, prefilling, chunk, n_decode):
+        if self.prefill_budget is None:
+            return super().plan_prefill(prefilling, chunk, n_decode)
+        left = self.prefill_budget
+        plan: Dict[int, int] = {}
+        for r in sorted(prefilling, key=_deadline_key):
+            if left <= 0:
+                break
+            n = min(chunk, len(r.prompt) - r.pos)
+            while n > 0 and self._eff_tokens(n, r.pos) > left:
+                n -= 1
+            if n > 0:
+                plan[r.slot] = n
+                left -= self._eff_tokens(n, r.pos)
+        return plan
+
+
+_SCHEDULERS = {
+    "fcfs": FCFSScheduler,
+    "decode-first": DecodeFirstScheduler,
+    "budgeted": BudgetedScheduler,
+}
+
+
+def make_scheduler(name: str, *, prefill_budget: Optional[int] = None
+                   ) -> Scheduler:
+    if name not in _SCHEDULERS:
+        raise ValueError(f"unknown scheduler {name!r}; "
+                         f"have {sorted(_SCHEDULERS)}")
+    if name == "budgeted":
+        return BudgetedScheduler(prefill_budget)
+    return _SCHEDULERS[name]()
+
+
+# ---------------------------------------------------------------------------
+# Front-door event loop: timed arrivals -> submit/step/backpressure
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TracedRequest:
+    """One arrival of a timed trace. ``deadline`` is the *relative* TTFT
+    SLO (first token due by ``t + deadline`` on the virtual clock);
+    ``None`` means best-effort."""
+    t: float
+    prompt: Sequence[int]
+    max_new: int = 16
+    deadline: Optional[float] = None
+
+
+@dataclass
+class TraceReport:
+    requests: List = field(default_factory=list)   # admitted Requests
+    rejected: int = 0                              # shed by backpressure
+
+    def merge(self, other: "TraceReport") -> "TraceReport":
+        return TraceReport(self.requests + other.requests,
+                           self.rejected + other.rejected)
+
+
+def _engine_idle(eng) -> bool:
+    return not eng.queue and all(s is None for s in eng.slots)
+
+
+def _play_engine(front, eng, trace: List[TracedRequest],
+                 max_steps: int) -> TraceReport:
+    """Drive one engine from a time-sorted trace: submit every arrival the
+    virtual clock has reached (rejections count, not raise), advance the
+    clock over idle gaps, step while there is work. ``front`` is what
+    ``submit`` is called on (the engine itself, or a ShardedFrontend that
+    routes + announces and lands the request on ``eng``)."""
+    report = TraceReport()
+    i = 0
+    for _ in range(max_steps):
+        while i < len(trace) and trace[i].t <= eng.now:
+            tr = trace[i]
+            i += 1
+            abs_deadline = None if tr.deadline is None else tr.t + tr.deadline
+            try:
+                req = front.submit(tr.prompt, max_new=tr.max_new,
+                                   deadline=abs_deadline, arrival=tr.t)
+            except QueueFull:
+                report.rejected += 1
+                continue
+            if isinstance(req, tuple):          # ShardedFrontend returns
+                req = req[1]                    # (shard, Request)
+            report.requests.append(req)
+        if _engine_idle(eng):
+            if i >= len(trace):
+                return report
+            eng.now = max(eng.now, trace[i].t)  # jump the idle gap
+            continue
+        eng.step()
+    raise RuntimeError(f"trace not drained in {max_steps} steps")
+
+
+def play_trace(engine, trace: Sequence[TracedRequest], *,
+               max_steps: int = 1_000_000) -> TraceReport:
+    """Run a timed arrival trace through a ``ServeEngine`` or a
+    ``ShardedFrontend``. Shards are independent servers with independent
+    virtual clocks, so a frontend trace is split by the (unchanged)
+    prefix-affinity router and each shard replays its own arrivals —
+    per-shard queues, per-shard backpressure."""
+    trace = sorted(trace, key=lambda r: r.t)
+    if hasattr(engine, "shards"):               # ShardedFrontend
+        per_shard: Dict[int, List[TracedRequest]] = {}
+        for tr in trace:
+            per_shard.setdefault(engine.shard_of(tr.prompt), []).append(tr)
+        report = TraceReport()
+        for k, shard_trace in sorted(per_shard.items()):
+            report = report.merge(_play_engine(engine, engine.shards[k],
+                                               shard_trace, max_steps))
+        return report
+    return _play_engine(engine, engine, trace, max_steps)
+
+
+# ---------------------------------------------------------------------------
+# Latency accounting
+# ---------------------------------------------------------------------------
+
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def latency_stats(report: TraceReport) -> Dict[str, float]:
+    """TTFT/TPOT percentiles and goodput-under-deadline for a finished
+    trace. TTFT = first decode token computed minus arrival; TPOT = mean
+    inter-token time over a request's decode phase. Goodput counts a
+    request iff it was admitted, not cancelled, and its first token
+    landed by its deadline (no-deadline requests count when they
+    complete); rejected arrivals count against the denominator."""
+    ttft = [r.first_token_at - r.arrival for r in report.requests
+            if r.first_token_at is not None]
+    tpot = [(r.finished_at - r.first_token_at) / (len(r.generated) - 1)
+            for r in report.requests
+            if r.finished_at is not None and r.first_token_at is not None
+            and len(r.generated) > 1]
+    met = 0
+    for r in report.requests:
+        if r.cancelled or r.first_token_at is None:
+            continue
+        if r.deadline is None:
+            met += r.finished_at is not None
+        else:
+            met += r.first_token_at <= r.deadline
+    offered = len(report.requests) + report.rejected
+    out = {"n_offered": offered, "n_rejected": report.rejected,
+           "goodput": round(float(met) / max(offered, 1), 4)}
+    for name, xs in (("ttft", ttft), ("tpot", tpot)):
+        for q in (50, 95, 99):
+            out[f"{name}_p{q}"] = round(_pct(xs, q), 4)
+    return out

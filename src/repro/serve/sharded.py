@@ -31,12 +31,13 @@ restore means K-shard output is token-identical to the single engine
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core import (BlockMeta, CacheMetrics, JobDAG, MessageBus, PeerTracker,
                     PeerTrackerMaster, TaskSpec)
 from .engine import Request, ServeEngine
 from .prefix_store import PrefixStore
+from .scheduler import Scheduler, StepCostModel
 from .tiered import TieredKVStore
 
 
@@ -65,7 +66,11 @@ class ShardedFrontend:
                  pool_blocks: Optional[int] = None,
                  host_capacity_bytes: int = 0,
                  paged: bool = False,
-                 record_eviction_log: bool = False) -> None:
+                 record_eviction_log: bool = False,
+                 scheduler: Union[str, Scheduler, None] = None,
+                 max_queue: Optional[int] = None,
+                 clock: Optional[StepCostModel] = None,
+                 eos_interval: int = 8) -> None:
         assert n_shards >= 1
         self.n_shards = n_shards
         self.block_tokens = block_tokens
@@ -98,7 +103,9 @@ class ShardedFrontend:
             self.shards.append(ServeEngine(
                 cfg, params, max_slots=max_slots, max_seq=max_seq,
                 store=store, eos_id=eos_id, prefill_chunk=prefill_chunk,
-                pool_blocks=pool_blocks, paged=paged))
+                pool_blocks=pool_blocks, paged=paged,
+                scheduler=scheduler, max_queue=max_queue, clock=clock,
+                eos_interval=eos_interval))
 
     # ---------------------------------------------------------- coordination
     def _ns(self, shard: int, ident: str) -> str:
@@ -167,13 +174,20 @@ class ShardedFrontend:
     def shard_of(self, prompt: Sequence[int]) -> int:
         return route_prefix(prompt, self.n_shards, self.block_tokens)
 
-    def submit(self, prompt: Sequence[int], max_new: int = 16
-               ) -> Tuple[int, Request]:
+    def submit(self, prompt: Sequence[int], max_new: int = 16, *,
+               deadline: Optional[float] = None,
+               arrival: Optional[float] = None) -> Tuple[int, Request]:
         k = self.shard_of(prompt)
         eng = self.shards[k]
-        req = eng.submit(prompt, max_new=max_new)
+        req = eng.submit(prompt, max_new=max_new,
+                         deadline=deadline, arrival=arrival)
         self._announce(k, eng.store, req.prefix_rid)
         return k, req
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a request on whichever shard owns it (same prefix-affinity
+        routing as submit)."""
+        return self.shards[self.shard_of(req.prompt)].cancel(req)
 
     def step(self) -> List[Request]:
         finished: List[Request] = []
@@ -239,7 +253,7 @@ class ShardedFrontend:
                                             for p in host_pools)
             out["host_high_water"] = sum(p.high_water for p in host_pools)
         for field in ("steps", "prefill_tokens", "prefill_tokens_skipped",
-                      "decoded_tokens"):
+                      "decoded_tokens", "rejected", "cancellations"):
             out[field if field != "steps" else "engine_steps"] = \
                 sum(getattr(e, field) for e in self.shards)
         out["prefill_saved_frac"] = (

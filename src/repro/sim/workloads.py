@@ -7,10 +7,17 @@
 * ``load_then_zip`` builds the two-stage DAG: a *load* stage materializes
   each source partition from stable storage (populating the cache), then
   the zip stage consumes the pairs.
+Arrival-process generators (PR 6) live here too: timed request arrivals
+for the serve front door — Poisson (the open-loop baseline), bursty
+(on/off, Markov-modulated) and diurnal (sinusoidal rate, thinned) — all
+seeded and deterministic, consumed by ``serve.play_trace`` and
+``benchmarks/serve_latency.py``.
 """
 from __future__ import annotations
 
 from typing import List, Optional, Tuple
+
+import numpy as np
 
 from ..core import BlockMeta, JobDAG, TaskSpec
 
@@ -115,3 +122,54 @@ def coalesce_job(job_id: str, n_groups: int, group_size: int,
             output=out, job=job_id, stage=1))
         outputs.append(out)
     return dag, outputs
+
+
+# ---------------------------------------------------------------------------
+# Arrival processes (PR 6): timed request arrivals for the serve front door
+# ---------------------------------------------------------------------------
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> List[float]:
+    """``n`` arrival times of a homogeneous Poisson process with ``rate``
+    arrivals per unit of virtual time (exponential i.i.d. gaps)."""
+    assert rate > 0
+    rng = np.random.default_rng(seed)
+    return list(np.cumsum(rng.exponential(1.0 / rate, size=n)))
+
+
+def bursty_arrivals(n: int, rate: float, seed: int = 0, *,
+                    burst_factor: float = 8.0, p_burst: float = 0.15,
+                    mean_burst: int = 8) -> List[float]:
+    """On/off (Markov-modulated) Poisson arrivals: the process alternates
+    between a quiet phase at ``rate`` and bursts of ~``mean_burst``
+    requests arriving ``burst_factor``× faster — the flash-crowd shape
+    that separates deadline-aware scheduling from FCFS hardest."""
+    assert rate > 0
+    rng = np.random.default_rng(seed)
+    t, out, left = 0.0, [], 0           # left = arrivals left in the burst
+    while len(out) < n:
+        if left == 0 and rng.random() < p_burst:
+            left = 1 + rng.geometric(1.0 / mean_burst)
+        r = rate * burst_factor if left > 0 else rate
+        left = max(left - 1, 0)
+        t += rng.exponential(1.0 / r)
+        out.append(t)
+    return out
+
+
+def diurnal_arrivals(n: int, rate: float, seed: int = 0, *,
+                     period: float = 200.0, depth: float = 0.8
+                     ) -> List[float]:
+    """Non-homogeneous Poisson arrivals with a sinusoidal rate
+    ``rate * (1 + depth * sin(2πt/period))`` — the day/night load swing —
+    generated by thinning against the peak rate."""
+    assert rate > 0 and 0 <= depth <= 1
+    rng = np.random.default_rng(seed)
+    peak = rate * (1 + depth)
+    t, out = 0.0, []
+    while len(out) < n:
+        t += rng.exponential(1.0 / peak)
+        lam = rate * (1 + depth * np.sin(2 * np.pi * t / period))
+        if rng.random() < lam / peak:
+            out.append(t)
+    return out

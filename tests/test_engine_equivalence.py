@@ -307,6 +307,41 @@ def test_paged_sharded_matches_gather_sharded(model):
         assert pe.paged and not ge.paged
 
 
+def test_scheduled_fcfs_matches_run_loop(model):
+    """PR 6 front door, zero-delta proof: an engine driven by the trace
+    event loop under an explicit FCFS scheduler must be *bit-identical* —
+    token-for-token generations AND the same eviction log — to the plain
+    submit-then-``run()`` loop. (All arrivals at t=0 makes the admission
+    order equal to submission order, so every step dispatches the same
+    work; the scheduler layer adds latency accounting, never behavior.)"""
+    from repro.serve import FCFSScheduler, TracedRequest, play_trace
+
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    cap = capacity(cfg, params)
+
+    plain_st = PrefixStore(cap, "lerc", block_tokens=BT)
+    plain = ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                        store=plain_st, prefill_chunk=8, paged=True)
+    preqs = [plain.submit(r, max_new=MAX_NEW) for r in reqs]
+    plain.run()
+    assert plain_st.evictions > 0, "workload produced no pressure"
+
+    sched_st = PrefixStore(cap, "lerc", block_tokens=BT)
+    sched = ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                        store=sched_st, prefill_chunk=8, paged=True,
+                        scheduler=FCFSScheduler())
+    trace = [TracedRequest(t=0.0, prompt=r, max_new=MAX_NEW) for r in reqs]
+    report = play_trace(sched, trace)
+
+    assert [r.generated for r in report.requests] == \
+        [r.generated for r in preqs]
+    assert sched_st.eviction_log == plain_st.eviction_log
+    assert [r.prefill_skipped for r in report.requests] == \
+        [r.prefill_skipped for r in preqs]
+    assert sched.steps == plain.steps
+
+
 def test_pool_reclaims_evicted_blocks(model):
     """Evictions free pool rows O(1); sustained traffic must not grow the
     pool past the byte budget's block count."""
