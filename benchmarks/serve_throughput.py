@@ -12,6 +12,14 @@ column shows what eliminating the per-slot cache buys. Acceptance targets:
 >=1.3x tokens/s paged-vs-gather and >=1.5x usable pool blocks at equal
 device bytes (plus the PR 2 target, >=3x pooled-vs-legacy). Each engine is
 warmed on the full workload first so compile time is excluded.
+
+With >=2 jax devices a fourth section runs the tensor-parallel arm
+(PR 7): the paged engine at tp in {1, 2[, 4]} under the SAME per-device
+byte budget, reporting tokens/s, usable pool blocks per device MiB, and
+the collectives one compiled step issues (counted from the step's HLO).
+Sharding every pool row over tp devices means the same device bytes hold
+tp x the blocks — target >=1.8x blocks per device byte at tp=2 vs tp=1.
+CPU recipe: XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 from __future__ import annotations
 
@@ -46,10 +54,12 @@ def _workload(vocab, n_requests, seed=0):
             for i in range(n_requests)]
 
 
-def _run_arms(arms, reqs, repeats=5) -> list:
+def _run_arms(arms, reqs, repeats=5):
     """Measure every (name, make_engine) arm best-of-N with the repeat
     loops *interleaved*, so a background-load spike penalizes all arms
-    equally instead of whichever one it landed on."""
+    equally instead of whichever one it landed on. Returns the result
+    rows plus each arm's last engine (for post-hoc inspection, e.g.
+    counting a TP step's collectives from its HLO)."""
     # warm-up: run the FULL workload on a throwaway engine per arm so
     # every (batch, chunk, pool-transfer) specialization is compiled
     # before the measured window (jitted fns are shared per-config)
@@ -90,7 +100,103 @@ def _run_arms(arms, reqs, repeats=5) -> list:
             "prefill_saved_frac": round(m["prefill_saved_frac"], 3),
             "evictions": m["evictions"],
         })
-    return rows
+    return rows, last
+
+
+def _tp_section(toy: bool) -> tuple:
+    """Tensor-parallel arm (PR 7): the paged engine at tp in {1, 2[, 4]}
+    under the SAME per-device byte budget. Every pool row shards over the
+    mesh, so one device's bytes back tp x the global blocks — the
+    capacity behind every effective hit multiplies without the policy
+    layer noticing. Skips (with a recipe) when only one device exists."""
+    import re
+
+    import jax
+    from repro.models import init_params, model_spec
+    from repro.models.common import ModelConfig
+    from repro.serve import PrefixStore, ServeEngine
+
+    if jax.device_count() < 2:
+        print("\n[tp] skipped: need >=2 jax devices for the tensor-"
+              "parallel arm (CPU recipe: XLA_FLAGS=--xla_force_host_"
+              "platform_device_count=8)")
+        return [], {}
+
+    # qwen2_7b's smoke config has a single KV head (unshardable); the TP
+    # arm needs its own GQA smoke shape — 8 query / 4 KV heads divides
+    # over tp in {1, 2, 4}
+    cfg = ModelConfig(arch="tp_bench", family="dense", n_layers=2,
+                      d_model=32, n_heads=8, n_kv_heads=4, d_head=8,
+                      d_ff=64, vocab=256, act="swiglu", layer_pattern="G")
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=cfg.dtype)
+    # shorter prompts than the main sections: the per-slot tail-row
+    # horizon must leave pool headroom inside the fixed byte budget
+    prefix, suffix, slots = 40, 8, 4
+    rng = np.random.default_rng(1)
+    prefixes = [list(rng.integers(0, cfg.vocab, prefix))
+                for _ in range(N_FAMILIES)]
+    reqs = [prefixes[i % N_FAMILIES]
+            + list(rng.integers(0, cfg.vocab, suffix))
+            for i in range(8 if toy else N_REQUESTS)]
+
+    probe = ServeEngine(cfg, params, max_slots=slots, max_seq=MAX_SEQ,
+                        store=PrefixStore(1 << 30, "lerc",
+                                          block_tokens=BT),
+                        paged=True, pool_blocks=1)
+    blk = probe.pool.block_nbytes
+    # fixed PER-DEVICE budget: tp x the global rows fit in it at tp, so
+    # the store may keep tp x the bytes before eviction pressure starts
+    horizon = -(-(prefix + suffix + MAX_NEW) // BT)
+    per_dev_budget = blk * (16 + slots * horizon + 1)
+    tps = [1, 2] + ([4] if jax.device_count() >= 4 else [])
+
+    def tp_arm(tp):
+        nblocks = per_dev_budget * tp // blk
+        return lambda: ServeEngine(
+            cfg, params, max_slots=slots, max_seq=MAX_SEQ,
+            store=PrefixStore(blk * (nblocks - slots * horizon - 1),
+                              "lerc", block_tokens=BT),
+            prefill_chunk=8, paged=True, pool_blocks=nblocks, tp=tp)
+
+    rows, engines = _run_arms([(f"paged tp={t}", tp_arm(t)) for t in tps],
+                              reqs, repeats=1 if toy else 8)
+    for row in rows:
+        eng = engines[row["engine"]]
+        m = eng.metrics()
+        dev_bytes = m["device_kv_bytes"]
+        row["tp"] = m["serve_tp"]
+        row["device_kv_kb"] = round(dev_bytes / 1024, 1)
+        row["global_kv_kb"] = round(m["kv_bytes_global"] / 1024, 1)
+        row["blocks_per_dev_mib"] = round(
+            m["pool_blocks"] / (dev_bytes / 2**20), 1)
+        # collectives ONE compiled engine step issues, straight from its
+        # HLO — the cost side of the tp x capacity trade
+        row["collectives_per_step"] = len(re.findall(
+            r"(?:all-gather|all-reduce|collective-permute|all-to-all)\(",
+            eng.step_hlo()))
+
+    print_table("Tensor-parallel paged serving: same per-device bytes, "
+                "tp x the blocks", rows,
+                ["engine", "tp", "tokens_per_s", "pool_blocks",
+                 "device_kv_kb", "global_kv_kb", "blocks_per_dev_mib",
+                 "collectives_per_step", "prefill_saved_frac",
+                 "evictions"])
+
+    tp1, tp2 = rows[0], rows[1]
+    density_ratio = (tp2["blocks_per_dev_mib"]
+                     / max(tp1["blocks_per_dev_mib"], 1e-9))
+    summary = {
+        "tp2_vs_tp1_blocks_per_device_byte": round(density_ratio, 2),
+        "tp2_collectives_per_step": tp2["collectives_per_step"],
+        "tp1_collectives_per_step": tp1["collectives_per_step"],
+        "tp_device_count": jax.device_count(),
+    }
+    print(f"\ntp=2 vs tp=1: {density_ratio:.1f}x usable pool blocks per "
+          f"device byte at {tp2['device_kv_kb']:.0f} KiB/device "
+          f"(target: >=1.8x); {tp2['collectives_per_step']} collectives "
+          "per step")
+    return rows, summary
 
 
 def main(toy: bool = False) -> None:
@@ -146,7 +252,7 @@ def main(toy: bool = False) -> None:
             store=PrefixStore(budget, "lerc", block_tokens=BT),
             prefill_chunk=8, paged=True, pool_blocks=paged_pool_blocks)
 
-    rows = _run_arms(
+    rows, _ = _run_arms(
         [("legacy (host KV, chunk=1)", legacy),
          ("gather (device pool, chunk=4)", gather(4)),
          ("gather (device pool, chunk=8)", gather(8)),
@@ -177,8 +283,11 @@ def main(toy: bool = False) -> None:
           f"{block_ratio:.1f}x usable pool blocks at "
           f"{pag['device_kv_kb']:.0f} vs {gat['device_kv_kb']:.0f} KiB "
           "device KV (targets: >=1.3x tokens/s, >=1.5x blocks)")
-    save_results("serve_throughput", rows + [{"engine": "summary",
-                                              **summary}])
+
+    tp_rows, tp_summary = _tp_section(toy)
+    summary.update(tp_summary)
+    save_results("serve_throughput", rows + tp_rows
+                 + [{"engine": "summary", **summary}])
 
 
 if __name__ == "__main__":

@@ -10,7 +10,15 @@ from typing import Optional, Tuple
 
 import jax
 
-from ..sharding import MeshContext
+from ..sharding import KVShardCtx, MeshContext, serve_tp_context
+
+
+def make_serve_tp_context(tp: int) -> KVShardCtx:
+    """Serve-plane TP mesh (PR 7): 1-D ``model`` axis over the first
+    ``tp`` local devices, sharding the paged KV pool's head dimension.
+    CPU-testable with XLA_FLAGS=--xla_force_host_platform_device_count=N
+    exactly like ``make_debug_mesh_context``."""
+    return serve_tp_context(tp)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

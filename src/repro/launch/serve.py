@@ -69,6 +69,13 @@ def serve_main(argv=None) -> int:
                          "evictions demote blocks here and prefix hits "
                          "promote them back instead of recomputing "
                          "(0 disables the tier; split across --shards)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor parallelism: shard every KV pool leaf "
+                         "(and the paged attention reading it) over a "
+                         "1-D model mesh of N devices; block tables and "
+                         "the whole store stay host-global. Paged plane "
+                         "only. CPU recipe: XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N")
     ap.add_argument("--shards", type=int, default=1,
                     help="cache shards: >1 runs a ShardedFrontend of "
                          "independent engines on the coordination plane, "
@@ -126,7 +133,7 @@ def serve_main(argv=None) -> int:
             prefill_chunk=args.prefill_chunk, pool_blocks=args.pool_blocks,
             host_capacity_bytes=host_bytes // args.shards,
             paged=args.paged, scheduler=scheduler,
-            max_queue=args.max_queue)
+            max_queue=args.max_queue, tp=args.tp)
     else:
         if host_bytes > 0:
             store: PrefixStore = TieredKVStore(
@@ -141,7 +148,8 @@ def serve_main(argv=None) -> int:
                           max_seq=args.max_seq, store=store,
                           prefill_chunk=args.prefill_chunk,
                           pool_blocks=args.pool_blocks, paged=args.paged,
-                          scheduler=scheduler, max_queue=args.max_queue)
+                          scheduler=scheduler, max_queue=args.max_queue,
+                          tp=args.tp)
 
     if host_bytes > 0:
         # a host budget below one KV block (per shard) sizes the pool to
@@ -181,7 +189,7 @@ def serve_main(argv=None) -> int:
         m.update(latency_stats(report))
     paged_on = (all(e.paged for e in eng.shards) if args.shards > 1
                 else eng.paged)
-    print(f"policy={args.policy}  shards={args.shards}  "
+    print(f"policy={args.policy}  shards={args.shards}  tp={args.tp}  "
           f"paged={'on' if paged_on else 'off'}  "
           f"scheduler={args.scheduler}"
           + (f"  arrival={args.arrival}@{args.arrival_rate}"

@@ -86,22 +86,25 @@ def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 def decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
                 mesh_ctx=None, unroll: int = 1, seq_lens=None,
-                paged_tables=None):
+                paged_tables=None, kv_shard=None):
     """(logits (B,1,V), new_cache). tokens: (B,S) — S=1 for plain decode,
     S>1 for chunked prefill (per-row start ``pos``, real lengths
     ``seq_lens``). pos: scalar absolute position or (B,) per-slot.
     ``paged_tables`` (B, NW): ``cache`` is the KV pool pytree and decode
-    runs straight out of the pool rows each row's block table names."""
+    runs straight out of the pool rows each row's block table names.
+    ``kv_shard`` (``sharding.KVShardCtx``): the pool leaves are sharded
+    on their KV-head dim and attention runs per-device under shard_map."""
     if cfg.family == "encdec":
         if seq_lens is not None or tokens.shape[1] != 1 \
-                or paged_tables is not None:
+                or paged_tables is not None or kv_shard is not None:
             raise NotImplementedError(
                 "chunked/paged decode is decoder-LM only (encdec is S=1)")
         return ED.encdec_decode_step(cfg, params, cache, tokens, pos,
                                      mesh_ctx=mesh_ctx, unroll=unroll)
     return LM.lm_decode_step(cfg, params, cache, tokens, pos,
                              mesh_ctx=mesh_ctx, unroll=unroll,
-                             seq_lens=seq_lens, paged_tables=paged_tables)
+                             seq_lens=seq_lens, paged_tables=paged_tables,
+                             kv_shard=kv_shard)
 
 
 # ---------------------------------------------------------------------------

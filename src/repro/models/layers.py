@@ -7,6 +7,7 @@ Sequence-dim sharding constraints (SP) are applied by the caller via
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -173,6 +174,65 @@ def _paged_attention(cfg: ModelConfig, q, k_pages, v_pages, tables, qpos):
     return _sdpa(cfg, q, kc, vc, m[:, None])
 
 
+def _paged_write_attend(cfg: ModelConfig, q, k, v, kp, vp, tables, lens,
+                        cache_pos):
+    """Zero-copy paged data plane: write the chunk's k/v into the pool
+    rows the block table names, attend straight out of the pool. Returns
+    (out, new_k_pages, new_v_pages). Also the per-device body of the TP
+    shard_map — q/k/v/pages arrive head-sliced there, everything else
+    replicated, and the ops below never mix KV heads."""
+    B, Sq = q.shape[:2]
+    bt = kp.shape[-3]
+    tpos = cache_pos[:, None] + jnp.arange(Sq)[None, :]          # (B,Sq)
+    blk = jnp.minimum(tpos // bt, tables.shape[1] - 1)
+    rows = jnp.take_along_axis(tables, blk, axis=1)
+    # right-padded (and inactive-slot) tokens land in pool row 0, the
+    # engine's reserved junk row — real rows only ever see writes of real
+    # tokens
+    rows = jnp.where(jnp.arange(Sq)[None, :] < lens[:, None], rows, 0)
+    widx = (rows.reshape(-1), (tpos % bt).reshape(-1))
+    ck = kp.at[widx].set(k.reshape((B * Sq,) + k.shape[2:]).astype(kp.dtype))
+    cv = vp.at[widx].set(v.reshape((B * Sq,) + v.shape[2:]).astype(vp.dtype))
+    out = _paged_attention(cfg, q, ck, cv, tables, tpos)
+    return out, ck, cv
+
+
+def _paged_write_attend_tp(cfg: ModelConfig, kv_shard, q, k, v, kp, vp,
+                           tables, lens, cache_pos):
+    """Tensor-parallel paged write+attend: the per-device body above under
+    ``shard_map``, q/k/v and the pool pages sliced on their head dims, the
+    block table (and every other host-derived operand) replicated. GQA
+    packing groups queries by KV head, so a contiguous H/tp query slice
+    owns exactly its KV slice's whole head groups — no cross-device
+    attention math. The attention outputs are all-gathered over heads
+    inside the map so the (replicated) ``wo`` projection runs on the full
+    head set on every device: at tp=1 the gather is the identity, and at
+    any tp the summation ORDER of the output projection is the single-
+    device order — generations stay token-identical (the psum formulation
+    would instead reduce partial wo products in mesh order, perturbing
+    bf16 rounding). The pages come back head-sharded, matching the pool's
+    committed layout, so the engine's donated step keeps them in place."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    ax = kv_shard.axis
+    heads = PartitionSpec(None, None, ax, None)   # q/k/v (B,S,h,D) and
+    repl = PartitionSpec()                        # pages (nb,bt,kv,D)
+
+    def body(q, k, v, kp, vp, tables, lens, cache_pos):
+        out, ck, cv = _paged_write_attend(cfg, q, k, v, kp, vp, tables,
+                                          lens, cache_pos)
+        out = jax.lax.all_gather(out, ax, axis=2, tiled=True)
+        return out, ck, cv
+
+    return shard_map(
+        body, mesh=kv_shard.mesh,
+        in_specs=(heads, heads, heads, heads, heads, repl, repl, repl),
+        out_specs=(PartitionSpec(), heads, heads),
+        check_rep=False,
+    )(q, k, v, kp, vp, tables, lens, cache_pos)
+
+
 def _tp_qkv_constraints(mesh_ctx, q, k, v):
     """Inside the TP region: heads over model, batch over data. When the
     head count does not divide the model axis (qwen2: 28H, whisper: 8H on
@@ -199,7 +259,7 @@ def attention(cfg: ModelConfig, params, x, *, positions, window=None,
               cache_valid_len=None, paged: Optional[Dict] = None,
               cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
               bidirectional: bool = False, prefix_len: int = 0,
-              mesh_ctx=None):
+              mesh_ctx=None, kv_shard=None):
     """Full attention layer (proj → rope → sdpa → proj).
 
     Modes:
@@ -247,22 +307,13 @@ def attention(cfg: ModelConfig, params, x, *, positions, window=None,
         if paged is not None:
             # zero-copy paged data plane: write the chunk into the pool
             # rows the block table names, attend straight out of the pool
+            # (one shard_map over the head-sharded pool under serve TP)
             tables, lens = paged["tables"], paged["seq_lens"]
-            bt = cache["k"].shape[-3]
-            tpos = cache_pos[:, None] + jnp.arange(Sq)[None, :]  # (B,Sq)
-            blk = jnp.minimum(tpos // bt, tables.shape[1] - 1)
-            rows = jnp.take_along_axis(tables, blk, axis=1)
-            # right-padded (and inactive-slot) tokens land in pool row 0,
-            # the engine's reserved junk row — real rows only ever see
-            # writes of real tokens
-            rows = jnp.where(jnp.arange(Sq)[None, :] < lens[:, None],
-                             rows, 0)
-            widx = (rows.reshape(-1), (tpos % bt).reshape(-1))
-            ck = cache["k"].at[widx].set(
-                k.reshape((B * Sq,) + k.shape[2:]).astype(cache["k"].dtype))
-            cv = cache["v"].at[widx].set(
-                v.reshape((B * Sq,) + v.shape[2:]).astype(cache["v"].dtype))
-            out = _paged_attention(cfg, q, ck, cv, tables, tpos)
+            fn = (partial(_paged_write_attend_tp, cfg, kv_shard)
+                  if kv_shard is not None
+                  else partial(_paged_write_attend, cfg))
+            out, ck, cv = fn(q, k, v, cache["k"], cache["v"], tables,
+                             lens, cache_pos)
         elif getattr(cache_pos, "ndim", 0) == 1:
             # per-slot positions (continuous batching): each slot scatters
             # its Sq-token chunk at its own offset. Positions are absolute

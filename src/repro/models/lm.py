@@ -108,7 +108,8 @@ def lm_spec(cfg: ModelConfig) -> Dict:
 
 def _apply_sublayer(cfg: ModelConfig, kind: str, prm, h, *, positions,
                     mesh_ctx=None, cache=None, cache_pos=None,
-                    cache_valid_len=None, paged=None, prefix_len: int = 0):
+                    cache_valid_len=None, paged=None, prefix_len: int = 0,
+                    kv_shard=None):
     """One pattern-unit sublayer. Returns (h, new_cache)."""
     window = cfg.window if kind in ("L", "R") else None
     new_cache = None
@@ -125,7 +126,7 @@ def _apply_sublayer(cfg: ModelConfig, kind: str, prm, h, *, positions,
                 cfg, prm["attn"], x, positions=positions, window=window,
                 cache=cache, cache_pos=cache_pos,
                 cache_valid_len=cache_valid_len, paged=paged,
-                mesh_ctx=mesh_ctx)
+                mesh_ctx=mesh_ctx, kv_shard=kv_shard)
         else:
             attn_out, _ = L.attention(cfg, prm["attn"], x,
                                       positions=positions, window=window,
@@ -275,7 +276,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
 
 def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
                    mesh_ctx=None, unroll: int = 1, seq_lens=None,
-                   paged_tables=None):
+                   paged_tables=None, kv_shard=None):
     """One decode step over a chunk of S tokens per row. tokens: (B,S);
     pos: scalar int32 (bulk decode, all rows aligned) or (B,) int32
     (continuous batching, per-slot start positions). For L layers the
@@ -313,6 +314,8 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
         assert per_slot and seq_lens is not None, \
             "paged decode needs per-slot positions and seq_lens"
         paged = {"tables": paged_tables, "seq_lens": seq_lens}
+    assert kv_shard is None or paged is not None, \
+        "serve TP (kv_shard) only shards the paged data plane"
     h = L.embed(cfg, params["embed"], tokens)
     positions = (pos[:, None].astype(jnp.int32) + jnp.arange(S, dtype=jnp.int32)[None, :]
                  if per_slot
@@ -348,7 +351,7 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
                                     cache=cache_r[key],
                                     cache_pos=sub_cache_pos(kind),
                                     cache_valid_len=sub_valid_len(kind),
-                                    paged=paged)
+                                    paged=paged, kv_shard=kv_shard)
             new_caches[key] = nc
         cache_stack = jax.tree.map(
             lambda c, n: jax.lax.dynamic_update_index_in_dim(
@@ -369,7 +372,7 @@ def lm_decode_step(cfg: ModelConfig, params, cache, tokens, pos, *,
                                 mesh_ctx=mesh_ctx, cache=cache[key],
                                 cache_pos=sub_cache_pos(k),
                                 cache_valid_len=sub_valid_len(k),
-                                paged=paged)
+                                paged=paged, kv_shard=kv_shard)
         new_cache[key] = nc
     if S > 1 or seq_lens is not None:
         # unembed only each row's last real token (padded rows are junk and

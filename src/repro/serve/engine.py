@@ -55,6 +55,7 @@ import numpy as np
 
 from ..models import decode_step, init_decode_cache
 from ..models.common import ModelConfig
+from ..sharding import KVShardCtx, serve_tp_context
 from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool, chain_block_nbytes
 from .prefix_store import PrefixStore
@@ -67,10 +68,12 @@ _DEFAULT_POOL_BLOCKS = 256
 
 
 @lru_cache(maxsize=None)
-def _step_fn(cfg: ModelConfig, paged: bool, eos_id: int):
-    """One shared jitted step per (hashable) config, data plane, and EOS
-    id: engines spun up on the same model reuse every compiled (B, S)
-    specialization instead of retracing behind a fresh closure. The KV
+def _step_fn(cfg: ModelConfig, paged: bool, eos_id: int,
+             kv_shard: Optional[KVShardCtx] = None):
+    """One shared jitted step per (hashable) config, data plane, EOS id,
+    and serve-TP mesh: engines spun up on the same model reuse every
+    compiled (B, S) specialization instead of retracing behind a fresh
+    closure. The KV
     argument (per-slot cache or pool buffers) is donated so XLA updates
     it in place; ``prev``/``use_prev`` route the previous step's argmax
     into decode feeds without a host round-trip.
@@ -99,7 +102,8 @@ def _step_fn(cfg: ModelConfig, paged: bool, eos_id: int):
             t = t.at[:, 0].set(jnp.where(use_prev, prev, t[:, 0]))
             logits, new_pool = decode_step(cfg, p, pool, t, pos,
                                            seq_lens=lens,
-                                           paged_tables=tables)
+                                           paged_tables=tables,
+                                           kv_shard=kv_shard)
             out = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
             return out, new_pool, _advance(out, meta, done)
 
@@ -161,7 +165,8 @@ class ServeEngine:
                  scheduler: Union[str, Scheduler, None] = None,
                  max_queue: Optional[int] = None,
                  clock: Optional[StepCostModel] = None,
-                 eos_interval: int = 8) -> None:
+                 eos_interval: int = 8, tp: int = 1,
+                 kv_shard: Optional[KVShardCtx] = None) -> None:
         template = init_decode_cache(cfg, 1, 8)
         for path, _ in _kv_leaves(template):
             assert path[-1] in ("k", "v"), (
@@ -187,6 +192,27 @@ class ServeEngine:
         # used to reject these configs outright; the restore path it
         # guarded was never valid for them.)
         self.restore_prefix = absolute_kv
+        # ----- serve tensor parallelism (PR 7): shard the paged KV pool
+        # (and the attention compute reading it) over a 1-D model mesh.
+        # Params and per-step host arrays are replicated; block tables,
+        # refcounts, and the whole store stay host-global — a pool row
+        # index means the same block on every shard.
+        if kv_shard is None and tp > 1:
+            kv_shard = serve_tp_context(tp)
+        if kv_shard is not None:
+            if not paged:
+                raise ValueError(
+                    "tensor parallelism shards the paged data plane; "
+                    f"pattern {cfg.layer_pattern!r} (or --no-paged-"
+                    "attention) runs the gather engine, which is tp=1 only")
+            kv_shard.validate(cfg)
+        self.kv_shard = kv_shard
+        self.tp = kv_shard.tp if kv_shard is not None else 1
+        self._put = (jnp.asarray if kv_shard is None else
+                     (lambda x: jax.device_put(jnp.asarray(x),
+                                               kv_shard.replicated())))
+        if kv_shard is not None:
+            params = jax.device_put(params, kv_shard.replicated())
         self.cfg = cfg
         self.params = params
         self.B = max_slots
@@ -210,7 +236,8 @@ class ServeEngine:
             pool_blocks = int(min(by_capacity, _DEFAULT_POOL_BLOCKS))
             if self.paged:
                 pool_blocks += self.B * self.table_width + 1
-        self.pool = KVBlockPool(template, bt, pool_blocks)
+        self.pool = KVBlockPool(template, bt, pool_blocks,
+                                shard_ctx=self.kv_shard)
         if self.paged:
             self.cache = None
             # every right-padded / inactive-slot token is scattered into
@@ -235,9 +262,10 @@ class ServeEngine:
         else:
             self.store.evict_payload = self.pool.free
 
-        self._step = _step_fn(cfg, self.paged, eos_id)
-        self._prev_out = jnp.zeros((self.B,), jnp.int32)
-        self._done_dev = jnp.zeros((self.B,), bool)
+        self._step = _step_fn(cfg, self.paged, eos_id, self.kv_shard)
+        self._prev_out = self._put(jnp.zeros((self.B,), jnp.int32))
+        self._done_dev = self._put(jnp.zeros((self.B,), bool))
+        self._last_step_avals = None    # shapes of the newest dispatch
         self._rid = itertools.count(1)
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * self.B
@@ -459,7 +487,7 @@ class ServeEngine:
         self._fresh_slots.clear()
         args = (self.params,
                 self.pool.buffers if self.paged else self.cache,
-                jnp.asarray(tokens), jnp.asarray(meta))
+                self._put(tokens), self._put(meta))
         if self.paged:
             if self._tables_dirty:
                 # attention (and the per-layer page gather on the XLA
@@ -472,11 +500,18 @@ class ServeEngine:
                 for r in active:
                     tab = self._tables[r.slot]
                     tables[r.slot, :len(tab)] = tab
-                self._tables_dev = jnp.asarray(tables)
+                self._tables_dev = self._put(tables)
                 self._tables_dirty = False
             args += (self._tables_dev,)
-        out_tok, new_kv, self._done_dev = self._step(*args, self._prev_out,
-                                                     self._done_dev)
+        args += (self._prev_out, self._done_dev)
+        # shapes/shardings of this dispatch, captured BEFORE the call
+        # (donation invalidates the KV buffers) — step_hlo() re-lowers
+        # from these to expose the compiled step, collectives included
+        self._last_step_avals = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(
+                a.shape, a.dtype, sharding=getattr(a, "sharding", None)),
+            args)
+        out_tok, new_kv, self._done_dev = self._step(*args)
         if self.paged:
             self.pool.buffers = new_kv
         else:
@@ -560,6 +595,15 @@ class ServeEngine:
                 return
             self.step()
 
+    def step_hlo(self) -> str:
+        """Compiled-HLO text of the most recent step dispatch (re-lowered
+        from its captured shapes/shardings — the donated buffers
+        themselves are gone). Lets benches count the collectives a TP
+        step actually issues. Requires at least one step() call."""
+        if self._last_step_avals is None:
+            raise RuntimeError("step_hlo() needs a prior step()")
+        return self._step.lower(*self._last_step_avals).compile().as_text()
+
     # -------------------------------------------------------------- metrics
     def metrics(self) -> Dict[str, float]:
         m = dict(self.store.metrics())
@@ -577,7 +621,15 @@ class ServeEngine:
             "rejected": self.rejected,
             "cancellations": self.cancellations,
             "host_syncs_avoided": max(self.steps - self.readback_syncs, 0),
-            "device_kv_bytes": self.pool.nbytes + (
+            # per-device vs global KV bytes, split EXPLICITLY: once the
+            # pool shards (tp>1) the two differ by a factor of tp, and
+            # "device_kv_bytes" keeps meaning what it says — bytes ONE
+            # device holds. (The gather cache only exists at tp=1.)
+            "serve_tp": self.tp,
+            "device_kv_bytes": self.pool.nbytes_per_device + (
+                0 if self.cache is None else
+                sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))),
+            "kv_bytes_global": self.pool.nbytes + (
                 0 if self.cache is None else
                 sum(leaf.nbytes for leaf in jax.tree.leaves(self.cache))),
             "prefill_saved_frac": (

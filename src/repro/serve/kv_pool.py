@@ -143,22 +143,46 @@ def _copy_row(pool, src, dst):
 
 
 class KVBlockPool:
-    """Refcounted paged block pool over an engine's KV cache pytree."""
+    """Refcounted paged block pool over an engine's KV cache pytree.
+
+    With ``shard_ctx`` (a ``sharding.KVShardCtx``, PR 7) every leaf is
+    laid out with a ``NamedSharding`` splitting the KV-head dim over the
+    mesh's ``model`` axis: one *global* row still means one chain block,
+    but its bytes (and the decode compute that reads them) span devices.
+    The free list, refcounts, and every row index stay host-side and
+    device-count-invariant — the policy layer cannot tell the pool is
+    sharded.
+    """
 
     def __init__(self, cache_template, block_tokens: int,
-                 num_blocks: int) -> None:
+                 num_blocks: int, shard_ctx=None) -> None:
         self.block_tokens = block_tokens
         self.num_blocks = max(int(num_blocks), 1)
+        self.shard_ctx = shard_ctx
+        if shard_ctx is not None:
+            for leaf in jax.tree.leaves(cache_template):
+                if leaf.shape[-2] % shard_ctx.tp:
+                    raise ValueError(
+                        f"KV pool leaf with {leaf.shape[-2]} KV heads "
+                        f"cannot shard over tp={shard_ctx.tp}")
         self.buffers = jax.tree.map(
-            lambda leaf: jnp.zeros(
+            lambda leaf: self._committed(jnp.zeros(
                 _pool_leaf_shape(leaf.shape, self.num_blocks, block_tokens),
-                leaf.dtype),
+                leaf.dtype)),
             cache_template)
         self.free_list: List[int] = list(range(self.num_blocks - 1, -1, -1))
         self.refs: List[int] = [0] * self.num_blocks
         self.block_nbytes = chain_block_nbytes(cache_template, block_tokens)
         self.grows = 0
         self.high_water = 0           # max rows ever simultaneously in use
+
+    def _committed(self, arr):
+        """Commit an array to the pool's sharding (no-op when unsharded).
+        Works for pool leaves AND stacked row batches — the sharded KV dim
+        is at -2 in both layouts."""
+        if self.shard_ctx is None:
+            return arr
+        return jax.device_put(arr, self.shard_ctx.pool_sharding(arr.ndim))
 
     # -------------------------------------------------------------- indices
     def alloc(self) -> int:
@@ -191,8 +215,20 @@ class KVBlockPool:
         return self.num_blocks - len(self.free_list)
 
     @property
+    def tp(self) -> int:
+        return self.shard_ctx.tp if self.shard_ctx is not None else 1
+
+    @property
     def nbytes(self) -> int:
+        """GLOBAL pool bytes, summed across every shard (the quantity the
+        store's byte budget prices)."""
         return sum(leaf.nbytes for leaf in jax.tree.leaves(self.buffers))
+
+    @property
+    def nbytes_per_device(self) -> int:
+        """Bytes one device actually holds: nbytes / tp (exact — leaf
+        construction checked KV-head divisibility)."""
+        return self.nbytes // self.tp
 
     def _grow(self) -> None:
         """Double the pool (unbounded-capacity stores never evict, so the
@@ -200,8 +236,8 @@ class KVBlockPool:
         old = self.num_blocks
         self.num_blocks = old * 2
         self.buffers = jax.tree.map(
-            lambda pbuf: jnp.concatenate(
-                [pbuf, jnp.zeros_like(pbuf)], axis=_row_axis(pbuf)),
+            lambda pbuf: self._committed(jnp.concatenate(
+                [pbuf, jnp.zeros_like(pbuf)], axis=_row_axis(pbuf))),
             self.buffers)
         self.free_list.extend(range(self.num_blocks - 1, old - 1, -1))
         self.refs.extend([0] * old)
@@ -245,6 +281,11 @@ class KVBlockPool:
     def write_rows(self, idxs: List[int], host_blocks) -> None:
         """Scatter host-side stacked block arrays (the pytree shape
         ``read_rows`` returns) into pool rows ``idxs``. The host→device
-        transfer happens inside the jit call."""
+        transfer happens inside the jit call; on a sharded pool the
+        stacked rows are committed to the matching KV-head sharding first
+        (each device receives only its head slice — the host tier itself
+        stays global-shape and device-invariant)."""
+        if self.shard_ctx is not None:
+            host_blocks = jax.tree.map(self._committed, host_blocks)
         self.buffers = _write_rows(self.buffers, host_blocks,
                                    jnp.asarray(idxs, jnp.int32))

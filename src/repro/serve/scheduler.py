@@ -279,7 +279,9 @@ def play_trace(engine, trace: Sequence[TracedRequest], *,
 
 
 def _pct(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+    # empty sample -> 0.0, not NaN: a trace where nothing finished must
+    # still produce a numeric (JSON-safe, comparable) report
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
 def latency_stats(report: TraceReport) -> Dict[str, float]:
@@ -288,7 +290,8 @@ def latency_stats(report: TraceReport) -> Dict[str, float]:
     inter-token time over a request's decode phase. Goodput counts a
     request iff it was admitted, not cancelled, and its first token
     landed by its deadline (no-deadline requests count when they
-    complete); rejected arrivals count against the denominator."""
+    complete); rejected arrivals count against the denominator. NaN-free
+    by construction: an empty or zero-offered trace reports zeros."""
     ttft = [r.first_token_at - r.arrival for r in report.requests
             if r.first_token_at is not None]
     tpot = [(r.finished_at - r.first_token_at) / (len(r.generated) - 1)

@@ -70,7 +70,7 @@ class ShardedFrontend:
                  scheduler: Union[str, Scheduler, None] = None,
                  max_queue: Optional[int] = None,
                  clock: Optional[StepCostModel] = None,
-                 eos_interval: int = 8) -> None:
+                 eos_interval: int = 8, tp: int = 1) -> None:
         assert n_shards >= 1
         self.n_shards = n_shards
         self.block_tokens = block_tokens
@@ -100,12 +100,15 @@ class ShardedFrontend:
                 self._distribute_profiles = store.policy.uses_dag
                 self._coordinated = store.policy.uses_completeness
             self._wire(k, store)
+            # shards (cache partitioning) and tp (tensor parallelism of
+            # each shard's pool) compose: every engine shares one serve
+            # mesh, so K shards × tp devices all hold 1/tp of each pool
             self.shards.append(ServeEngine(
                 cfg, params, max_slots=max_slots, max_seq=max_seq,
                 store=store, eos_id=eos_id, prefill_chunk=prefill_chunk,
                 pool_blocks=pool_blocks, paged=paged,
                 scheduler=scheduler, max_queue=max_queue, clock=clock,
-                eos_interval=eos_interval))
+                eos_interval=eos_interval, tp=tp))
 
     # ---------------------------------------------------------- coordination
     def _ns(self, shard: int, ident: str) -> str:

@@ -1,4 +1,6 @@
 """repro.sharding — logical-axis partition rules (DP/FSDP/TP/EP/SP)."""
-from .rules import LOGICAL_RULES, MeshContext, local_context
+from .rules import (LOGICAL_RULES, KVShardCtx, MeshContext, local_context,
+                    serve_tp_context)
 
-__all__ = ["LOGICAL_RULES", "MeshContext", "local_context"]
+__all__ = ["LOGICAL_RULES", "KVShardCtx", "MeshContext", "local_context",
+           "serve_tp_context"]

@@ -247,3 +247,67 @@ class MeshContext:
 def local_context() -> MeshContext:
     """Single-device context (smoke tests): no mesh, no constraints."""
     return MeshContext(mesh=None, data_axes=(), seq_shard=False)
+
+
+# ---------------------------------------------------------------------------
+# Serve-plane tensor parallelism (PR 7)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class KVShardCtx:
+    """Tensor parallelism for the *paged serve plane*: a 1-D mesh whose
+    ``axis`` shards the KV-head dimension of every pool leaf (and the
+    matching q/k/v head slices inside the attention shard_map).
+
+    Deliberately NOT a ``MeshContext``: serving wants attention-only
+    sharding with replicated parameters — the full rule table would drag
+    in FSDP gathers, Megatron MLP splits, and vocab-parallel logits, none
+    of which pay off at decode batch sizes. Block tables, refcounts, and
+    every host-side store structure stay device-invariant: a pool row
+    index means the same block on every shard, so the policy/tiering/
+    coordination layers never see the mesh.
+
+    Frozen (and ``Mesh`` is hashable), so a ctx can key the engine's
+    shared-jit ``lru_cache`` directly.
+    """
+
+    mesh: Mesh
+    axis: str = "model"
+
+    @property
+    def tp(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def head_spec(self, ndim: int, head_axis: int) -> P:
+        """PartitionSpec sharding dim ``head_axis`` of an ndim tensor."""
+        dims: list = [None] * ndim
+        dims[head_axis] = self.axis
+        return P(*dims)
+
+    def pool_sharding(self, ndim: int) -> NamedSharding:
+        """Sharding for a pool leaf (*lead, nb, bt, KV, D) — or a stacked
+        row batch (n, *lead, bt, KV, D): KV sits at dim -2 in both."""
+        return NamedSharding(self.mesh, self.head_spec(ndim, ndim - 2))
+
+    def validate(self, cfg) -> None:
+        if cfg.kv_heads % self.tp:
+            raise ValueError(
+                f"tensor parallelism tp={self.tp} needs the KV-head count "
+                f"to divide evenly; {cfg.arch} has kv_heads={cfg.kv_heads}")
+
+
+def serve_tp_context(tp: int, axis: str = "model") -> KVShardCtx:
+    """1-D serve mesh over the first ``tp`` local devices. CPU-testable:
+    XLA_FLAGS=--xla_force_host_platform_device_count=N fakes N devices."""
+    devs = jax.devices()
+    if len(devs) < tp:
+        raise ValueError(
+            f"--tp {tp} needs {tp} devices but only {len(devs)} are "
+            "visible; on CPU set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={tp} (before jax "
+            "initializes)")
+    return KVShardCtx(mesh=Mesh(np.asarray(devs[:tp]), (axis,)), axis=axis)

@@ -23,9 +23,11 @@ import pytest
 
 from repro import configs
 from repro.models import init_params, model_spec
+from repro.models.common import ModelConfig
 from repro.serve import (LegacyServeEngine, PrefixStore,
                          ReferencePrefixStore, ServeEngine, ShardedFrontend,
                          TieredKVStore)
+from repro.sharding import serve_tp_context
 
 BT = 8          # block_tokens
 PROMPT = 32     # uniform prompt length (4 blocks)
@@ -340,6 +342,126 @@ def test_scheduled_fcfs_matches_run_loop(model):
     assert [r.prefill_skipped for r in report.requests] == \
         [r.prefill_skipped for r in preqs]
     assert sched.steps == plain.steps
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel paged serving (PR 7)
+# ---------------------------------------------------------------------------
+# The default smoke config has 1 KV head (unshardable), so TP runs on a
+# dedicated config whose 4 KV heads divide every mesh under test. The
+# engines below must be *token-identical with bit-identical eviction logs*
+# across meshless / 1-device mesh / tp=2 / tp=4: the attention outputs are
+# all-gathered inside the shard_map, so the output projection (and hence
+# every logit) is computed in single-device summation order on every tp.
+
+TP_CFG = ModelConfig(arch="tp_smoke", family="dense", n_layers=2,
+                     d_model=32, n_heads=8, n_kv_heads=4, d_head=8,
+                     d_ff=64, vocab=256, act="swiglu", layer_pattern="G")
+
+
+@pytest.fixture(scope="module")
+def tp_model():
+    params = init_params(jax.random.key(0), model_spec(TP_CFG),
+                         dtype=TP_CFG.dtype)
+    return TP_CFG, params
+
+
+def _tp_store(tiered, policy, blk):
+    if tiered:
+        return TieredKVStore(blk * 6, policy, block_tokens=BT,
+                             host_capacity_bytes=blk * 64)
+    return PrefixStore(blk * 10, policy, block_tokens=BT)
+
+
+def _run_tp(cfg, params, reqs, *, policy, tiered, tp):
+    probe = ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                        store=PrefixStore(1 << 30, policy, block_tokens=BT),
+                        pool_blocks=1, paged=True)
+    blk = probe._block_nbytes()
+    st = _tp_store(tiered, policy, blk)
+    kw = {"kv_shard": serve_tp_context(tp)} if tp else {}
+    eng = ServeEngine(cfg, params, max_slots=2, max_seq=64, store=st,
+                      prefill_chunk=8, paged=True, **kw)
+    rs = [eng.submit(r, max_new=MAX_NEW) for r in reqs]
+    eng.run()
+    return eng, rs, st
+
+
+def test_mesh1_engine_bit_identical(tp_model):
+    """An engine built on a 1-device mesh (shard_map, NamedSharding-
+    committed pool, replicated params) is bit-identical to the meshless
+    engine: same tokens, same eviction log, same ERC counters. Runs in
+    the plain 1-device tier-1 suite."""
+    cfg, params = tp_model
+    reqs = workload(cfg.vocab)
+    base, brs, bst = _run_tp(cfg, params, reqs, policy="lerc",
+                             tiered=False, tp=0)
+    mesh, mrs, mst = _run_tp(cfg, params, reqs, policy="lerc",
+                             tiered=False, tp=1)
+    assert bst.evictions > 0, "workload produced no pressure"
+    assert [r.generated for r in mrs] == [r.generated for r in brs]
+    assert mst.eviction_log == bst.eviction_log
+    assert mst.state.ref_count == bst.state.ref_count
+    assert mst.state.eff_ref_count == bst.state.eff_ref_count
+    assert [r.prefill_skipped for r in mrs] == \
+        [r.prefill_skipped for r in brs]
+    # the per-device/global byte split collapses at tp=1
+    assert mesh.tp == 1
+    assert mesh.pool.nbytes_per_device == mesh.pool.nbytes
+
+
+@pytest.mark.parametrize("tiered", [False, True],
+                         ids=["paged", "tiered"])
+@pytest.mark.parametrize("policy", ["lru", "lerc"])
+def test_tp_engines_token_identical(tp_model, policy, tiered):
+    """tp ∈ {1, 2, 4} engines vs the meshless engine: token-identical
+    generations, bit-identical eviction logs (and demotion/promotion
+    streams on the tiered store). Needs forced host devices — the CI TP
+    leg runs with XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    cfg, params = tp_model
+    reqs = workload(cfg.vocab, n_requests=10, n_families=2, seed=3)
+    base, brs, bst = _run_tp(cfg, params, reqs, policy=policy,
+                             tiered=tiered, tp=0)
+    if tiered:
+        assert bst.metrics_obj.promotions > 0, "no promotion exercised"
+    else:
+        assert bst.evictions > 0, "workload produced no pressure"
+    tps = [1, 2] + ([4] if jax.device_count() >= 4 else [])
+    for tp in tps:
+        eng, rs, st = _run_tp(cfg, params, reqs, policy=policy,
+                              tiered=tiered, tp=tp)
+        assert [r.generated for r in rs] == \
+            [r.generated for r in brs], f"tp={tp}"
+        assert st.eviction_log == bst.eviction_log, f"tp={tp}"
+        if tiered:
+            assert st.host_eviction_log == bst.host_eviction_log
+            assert st.metrics_obj.demotions == bst.metrics_obj.demotions
+            assert st.metrics_obj.promotions == bst.metrics_obj.promotions
+        # satellite: per-device vs global bytes reported explicitly
+        assert eng.pool.nbytes_per_device * tp == eng.pool.nbytes
+        m = eng.metrics()
+        assert m["serve_tp"] == tp
+        assert m["device_kv_bytes"] * tp == m["kv_bytes_global"]
+
+
+def test_tp_rejects_gather_plane_and_indivisible_heads(tp_model):
+    """TP is paged-plane only and must refuse KV-head counts the mesh
+    cannot split — loud errors, not silent wrong sharding."""
+    cfg, params = tp_model
+    ctx = serve_tp_context(1)
+    with pytest.raises(ValueError, match="gather"):
+        ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                    paged=False, kv_shard=ctx)
+    bad = configs.get("qwen2_7b", smoke=True)     # 1 KV head
+    bad_params = init_params(jax.random.key(0), model_spec(bad),
+                             dtype=bad.dtype)
+    if jax.device_count() >= 2:
+        with pytest.raises(ValueError, match="kv_heads"):
+            ServeEngine(bad, bad_params, max_slots=2, max_seq=64,
+                        paged=True, tp=2)
 
 
 def test_pool_reclaims_evicted_blocks(model):

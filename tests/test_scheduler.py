@@ -111,6 +111,30 @@ def test_decode_first_plan():
         {0: 16}
 
 
+def test_latency_stats_empty_trace_is_nan_free():
+    """Zero finished requests (or a fully-shed trace) must report plain
+    zeros — an empty sample used to feed NaN percentiles into the JSON
+    artifact and a zero-offered trace risked dividing by zero."""
+    import math
+
+    from repro.serve.engine import Request
+    from repro.serve.scheduler import TraceReport
+
+    unfinished = Request(rid=1, prompt=[0] * 8, max_new=4)
+    for report in (TraceReport(),                        # nothing offered
+                   TraceReport(rejected=5),              # everything shed
+                   TraceReport(requests=[unfinished])):  # nothing finished
+        stats = latency_stats(report)
+        for k, v in stats.items():
+            assert isinstance(v, (int, float)), k
+            assert math.isfinite(v), f"{k} is {v}"
+        for q in (50, 95, 99):
+            assert stats[f"ttft_p{q}"] == 0.0
+            assert stats[f"tpot_p{q}"] == 0.0
+    assert latency_stats(TraceReport())["goodput"] == 0.0
+    assert latency_stats(TraceReport(rejected=5))["n_offered"] == 5
+
+
 def test_make_scheduler():
     assert make_scheduler("fcfs").name == "fcfs"
     assert make_scheduler("decode-first").name == "decode-first"
