@@ -19,14 +19,24 @@ class CacheMetrics:
     disk_bytes_read: int = 0
     mem_bytes_read: int = 0
     # ---- tiered stores (serve.TieredKVStore; core's mem/disk analogue) ----
-    # ``hits`` counts presence in ANY tier; ``tier1_hits`` is the slice of
-    # those served by the slow tier (a hit that pays a promotion copy, not
-    # a recompute). Effective hits are tier-0-only by Def. 1: the whole
-    # peer group must sit in the fast tier.
+    # ``hits`` counts presence in ANY tier; ``tier1_hits``/``tier2_hits``
+    # are the slices served by the host/disk tiers (hits that pay a
+    # promotion copy, not a recompute). Effective hits are tier-0-only by
+    # Def. 1: the whole peer group must sit in the fast tier.
     tier1_hits: int = 0
-    demotions: int = 0        # fast tier -> slow tier (block survives)
-    promotions: int = 0       # slow tier -> fast tier (chain reused)
-    host_evictions: int = 0   # out of the slow tier (block dies)
+    tier2_hits: int = 0
+    demotions: int = 0        # fast tier -> host tier (block survives)
+    promotions: int = 0       # slower tier -> fast tier (chain reused)
+    host_evictions: int = 0   # out of the host tier, no disk tier to catch
+    # ---- the disk rung (PR 8) ----
+    disk_demotions: int = 0   # host tier -> disk tier (block survives again)
+    disk_promotions: int = 0  # the slice of ``promotions`` sourced from disk
+    disk_evictions: int = 0   # out of the disk tier (block finally dies)
+    # ---- transcoding + dispatch economics ----
+    quantized_demotions: int = 0     # demotions that narrowed the dtype
+    dequantized_promotions: int = 0  # promotions that widened it back
+    promotion_dispatches: int = 0    # batched transfers (1 per tier per
+    #                                  promotion, however many blocks ride)
 
     def record_access(self, hit: bool, effective: bool,
                       tier: int = 0) -> None:
@@ -35,6 +45,8 @@ class CacheMetrics:
             self.hits += 1
             if tier == 1:
                 self.tier1_hits += 1
+            elif tier == 2:
+                self.tier2_hits += 1
         if effective:
             if not hit:
                 raise ValueError("an effective hit must be a hit")
@@ -59,9 +71,19 @@ class CacheMetrics:
             disk_bytes_read=self.disk_bytes_read + other.disk_bytes_read,
             mem_bytes_read=self.mem_bytes_read + other.mem_bytes_read,
             tier1_hits=self.tier1_hits + other.tier1_hits,
+            tier2_hits=self.tier2_hits + other.tier2_hits,
             demotions=self.demotions + other.demotions,
             promotions=self.promotions + other.promotions,
             host_evictions=self.host_evictions + other.host_evictions,
+            disk_demotions=self.disk_demotions + other.disk_demotions,
+            disk_promotions=self.disk_promotions + other.disk_promotions,
+            disk_evictions=self.disk_evictions + other.disk_evictions,
+            quantized_demotions=(self.quantized_demotions
+                                 + other.quantized_demotions),
+            dequantized_promotions=(self.dequantized_promotions
+                                    + other.dequantized_promotions),
+            promotion_dispatches=(self.promotion_dispatches
+                                  + other.promotion_dispatches),
         )
 
     def as_dict(self) -> Dict[str, float]:
@@ -75,9 +97,16 @@ class CacheMetrics:
             "disk_bytes_read": self.disk_bytes_read,
             "mem_bytes_read": self.mem_bytes_read,
             "tier1_hits": self.tier1_hits,
+            "tier2_hits": self.tier2_hits,
             "demotions": self.demotions,
             "promotions": self.promotions,
             "host_evictions": self.host_evictions,
+            "disk_demotions": self.disk_demotions,
+            "disk_promotions": self.disk_promotions,
+            "disk_evictions": self.disk_evictions,
+            "quantized_demotions": self.quantized_demotions,
+            "dequantized_promotions": self.dequantized_promotions,
+            "promotion_dispatches": self.promotion_dispatches,
         }
 
 

@@ -69,6 +69,22 @@ def serve_main(argv=None) -> int:
                          "evictions demote blocks here and prefix hits "
                          "promote them back instead of recomputing "
                          "(0 disables the tier; split across --shards)")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8", "fp8"],
+                    help="transcode demoted KV blocks to this format "
+                         "(per-layer-per-block f32 scales): the host/disk "
+                         "byte budgets then hold ~2-4x more blocks; "
+                         "promotion dequantizes on device. 'none' keeps "
+                         "every path bit-identical to the lossless tier")
+    ap.add_argument("--disk-cache-mb", type=int, default=0,
+                    help="disk KV tier per engine (np.memmap row files): "
+                         "host-tier evictions demote here instead of "
+                         "dying, and lookups promote disk-resident chains "
+                         "back to the device pool (0 disables; needs "
+                         "--host-cache-kb > 0; split across --shards)")
+    ap.add_argument("--disk-dir", default=None,
+                    help="directory for the disk tier's memmap files "
+                         "(default: a TemporaryDirectory per engine)")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor parallelism: shard every KV pool leaf "
                          "(and the paged attention reading it) over a "
@@ -109,6 +125,12 @@ def serve_main(argv=None) -> int:
     params = init_params(jax.random.key(args.seed), model_spec(cfg),
                          dtype=cfg.dtype)
     host_bytes = args.host_cache_kb * 1024
+    disk_bytes = args.disk_cache_mb * 1024 * 1024
+    if disk_bytes > 0 and host_bytes == 0:
+        print("warning: --disk-cache-mb needs --host-cache-kb > 0 (blocks "
+              "demote device->host->disk); disk tier disabled",
+              file=sys.stderr)
+        disk_bytes = 0
     absolute_kv = set(cfg.layer_pattern) <= {"G", "M"}
     if args.paged is None:
         # zero-copy paged attention is the default wherever the KV layout
@@ -132,6 +154,9 @@ def serve_main(argv=None) -> int:
             policy=args.policy, block_tokens=args.block_tokens,
             prefill_chunk=args.prefill_chunk, pool_blocks=args.pool_blocks,
             host_capacity_bytes=host_bytes // args.shards,
+            kv_quant=args.kv_quant,
+            disk_capacity_bytes=disk_bytes // args.shards,
+            disk_dir=args.disk_dir,
             paged=args.paged, scheduler=scheduler,
             max_queue=args.max_queue, tp=args.tp)
     else:
@@ -139,7 +164,10 @@ def serve_main(argv=None) -> int:
             store: PrefixStore = TieredKVStore(
                 capacity_bytes=args.cache_kb * 1024, policy=args.policy,
                 block_tokens=args.block_tokens,
-                host_capacity_bytes=host_bytes)
+                host_capacity_bytes=host_bytes,
+                kv_quant=args.kv_quant,
+                disk_capacity_bytes=disk_bytes,
+                disk_dir=args.disk_dir)
         else:
             store = PrefixStore(capacity_bytes=args.cache_kb * 1024,
                                 policy=args.policy,
@@ -195,6 +223,7 @@ def serve_main(argv=None) -> int:
           + (f"  arrival={args.arrival}@{args.arrival_rate}"
              if args.arrival else "")
           + f"  host_cache_kb={args.host_cache_kb}  "
+          f"kv_quant={args.kv_quant}  disk_cache_mb={args.disk_cache_mb}  "
           f"wall={time.time()-t0:.1f}s")
     for k, v in m.items():
         print(f"  {k:26s} {v:.3f}" if isinstance(v, float)

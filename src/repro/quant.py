@@ -1,0 +1,216 @@
+"""Shared per-block quantization — the transcode kernels behind KV-cache
+tiering (``serve.TieredKVStore``) and gradient compression
+(``train.compression``).
+
+One storage format = one ``QuantSpec``: symmetric scale-per-block
+quantization into a 1-byte dtype (int8, or float8_e4m3fn via ``ml_dtypes``
+— a hard jax dependency, nothing new is imported into the image). The
+same math is exposed three ways so every layer reports identical numbers:
+
+* **batched jnp kernels over pool-row layouts** — stacked chain blocks
+  shaped ``(n, *lead, bt, KV, D)`` quantize with one f32 scale per
+  ``(row, *lead)`` sub-block (per-layer per-block scales: the amax
+  reduction runs over the trailing ``(bt, KV, D)`` axes only). These are
+  plain traceable functions; ``serve.kv_pool`` fuses them into its own
+  jitted gather/scatter so a transcoding demotion is ONE dispatch and only
+  the narrow bytes (+ tiny scales) cross the host boundary.
+* **numpy twins** (``*_np``) for host↔disk transcodes, where no device is
+  involved.
+* **per-tensor helpers** for the gradient path (one scale per tensor —
+  exactly the 1-bit-Adam-family wire format ``train.compression`` always
+  used).
+
+``compression_ratio`` is the single source of truth for stored-bytes
+accounting: it includes the f32 scale-array overhead and prices the
+*actual* source dtype (bf16 sources compress 2x into int8, not the 4x a
+f32-only formula would claim).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+# all-zero blocks quantize against this floor (q == 0 everywhere, and the
+# dequantized block is exactly zero) — matches the historical gradient path
+_EPS = 1e-12
+SCALE_DTYPE = np.dtype(np.float32)
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """One symmetric quantized storage format.
+
+    ``qmax`` is the largest representable magnitude after scaling (127 for
+    int8; 448, the float8_e4m3fn max, for fp8). ``rt_bound`` bounds the
+    round-trip error: ``|x - dequant(quant(x))| <= rt_bound * amax(block)``
+    element-wise (int8: half a quantization step, 1/254; fp8 e4m3: half an
+    ulp in the top binade, 16/448). Frozen and hashable so a spec can be a
+    jit static argument."""
+
+    name: str
+    qmax: float
+    dtype: np.dtype
+    rt_bound: float
+
+    @property
+    def itemsize(self) -> int:
+        return self.dtype.itemsize
+
+    @property
+    def is_int(self) -> bool:
+        return np.issubdtype(self.dtype, np.integer)
+
+
+INT8 = QuantSpec("int8", 127.0, np.dtype(np.int8), 1.0 / 254.0)
+FP8 = QuantSpec("fp8", 448.0, np.dtype(ml_dtypes.float8_e4m3fn),
+                16.0 / 448.0)
+
+SPECS = {"int8": INT8, "fp8": FP8}
+
+
+def get_spec(name: Union[str, QuantSpec, None]) -> Optional[QuantSpec]:
+    """Resolve a CLI-style name to a spec; ``None``/``"none"`` -> None
+    (lossless — every transcode path degrades to a plain copy)."""
+    if name is None or isinstance(name, QuantSpec):
+        return name
+    key = name.lower()
+    if key in ("none", ""):
+        return None
+    if key not in SPECS:
+        raise ValueError(f"unknown quant format {name!r}; "
+                         f"have {sorted(SPECS)} or 'none'")
+    return SPECS[key]
+
+
+# ---------------------------------------------------------------------------
+# Batched block kernels (jnp — traceable, fused into callers' jits)
+# ---------------------------------------------------------------------------
+
+def _encode(y: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Scaled values -> storage dtype. |y| <= qmax by construction, so the
+    fp8 cast never overflows (448 is exactly representable) and the int8
+    round stays inside [-127, 127] up to the explicit clip."""
+    if spec.is_int:
+        return jnp.clip(jnp.round(y), -spec.qmax, spec.qmax) \
+            .astype(spec.dtype)
+    return y.astype(spec.dtype)
+
+
+def quantize_blocks(x: jax.Array, spec: QuantSpec
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize stacked chain blocks ``(n, *mid, bt, KV, D)`` with one f32
+    scale per ``(n, *mid)`` sub-block. Returns ``(q, scales)`` where ``q``
+    has ``x``'s shape in ``spec.dtype`` and ``scales`` drops the trailing
+    three axes."""
+    ax = (-3, -2, -1)
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=ax, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / spec.qmax
+    q = _encode(xf / scale, spec)
+    return q, jnp.squeeze(scale, ax).astype(jnp.float32)
+
+
+def dequantize_blocks(q: jax.Array, scales: jax.Array, dtype: Any
+                      ) -> jax.Array:
+    """Invert ``quantize_blocks``: scales broadcast back over the trailing
+    ``(bt, KV, D)`` axes."""
+    return (q.astype(jnp.float32)
+            * scales[..., None, None, None]).astype(dtype)
+
+
+# jitted entry points for callers without a jit of their own (tests, host
+# tools). spec/dtype are static: one compiled specialization per format.
+quantize_rows = jax.jit(quantize_blocks, static_argnames=("spec",))
+dequantize_rows = jax.jit(dequantize_blocks, static_argnames=("dtype",))
+
+
+# ---------------------------------------------------------------------------
+# numpy twins (host <-> disk transcodes; no device in the loop)
+# ---------------------------------------------------------------------------
+
+def quantize_blocks_np(x: np.ndarray, spec: QuantSpec
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    ax = (-3, -2, -1)
+    xf = np.asarray(x, np.float32)
+    amax = np.max(np.abs(xf), axis=ax, keepdims=True)
+    scale = np.maximum(amax, _EPS) / spec.qmax
+    y = xf / scale
+    if spec.is_int:
+        q = np.clip(np.round(y), -spec.qmax, spec.qmax).astype(spec.dtype)
+    else:
+        q = y.astype(spec.dtype)
+    return q, np.squeeze(scale, ax).astype(SCALE_DTYPE)
+
+
+def dequantize_blocks_np(q: np.ndarray, scales: np.ndarray, dtype: Any
+                         ) -> np.ndarray:
+    return (np.asarray(q, np.float32)
+            * np.asarray(scales, np.float32)[..., None, None, None]) \
+        .astype(dtype)
+
+
+def transcode_tree_np(blocks, scales, src_spec: Optional[QuantSpec],
+                      dst_spec: Optional[QuantSpec], lossless_templates=None):
+    """Re-encode a pytree of stacked blocks from one storage format to
+    another (host→disk demotion to a narrower dtype). ``scales`` is the
+    matching scales pytree (None when ``src_spec`` is None). Returns
+    ``(blocks', scales')`` in ``dst_spec``'s format; same-format transcodes
+    are the identity (no precision loss). For a quantized→lossless
+    transcode the blocks dequantize to f32 and the destination pool's
+    write cast lands them in its leaf dtype."""
+    if src_spec == dst_spec:
+        return blocks, scales
+    if src_spec is not None:        # widen to f32 first
+        blocks = jax.tree.map(
+            lambda q, s: dequantize_blocks_np(q, s, np.float32),
+            blocks, scales)
+        scales = None
+    if dst_spec is None:
+        return blocks, None
+    pairs = jax.tree.map(lambda b: quantize_blocks_np(b, dst_spec), blocks)
+    is_pair = lambda t: isinstance(t, tuple)                      # noqa: E731
+    return (jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair),
+            jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair))
+
+
+# ---------------------------------------------------------------------------
+# Per-tensor helpers (gradient compression wire format)
+# ---------------------------------------------------------------------------
+
+def quantize_tensor(x: jax.Array, spec: QuantSpec = INT8
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Whole-tensor symmetric quantization (one scalar scale) — the
+    gradient wire format. Numerics are bit-identical to the historical
+    ``train.compression._quantize_int8``."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, _EPS) / spec.qmax
+    return _encode(xf / scale, spec), scale
+
+
+def dequantize_tensor(q: jax.Array, scale: jax.Array,
+                      dtype: Any = jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Byte accounting
+# ---------------------------------------------------------------------------
+
+def compression_ratio(numel: int, src_dtype: Any,
+                      spec: Optional[QuantSpec] = INT8,
+                      n_scales: int = 1) -> float:
+    """Stored-bytes ratio lossless/quantized for ``numel`` elements of
+    ``src_dtype`` carried with ``n_scales`` f32 scales. This is the ONE
+    formula train and serve both report: it prices the actual source
+    dtype (bf16 -> int8 is 2x, not 4x) and charges the scale array.
+    ``spec=None`` (lossless) is ratio 1."""
+    if spec is None:
+        return 1.0
+    src = np.dtype(src_dtype).itemsize * numel
+    return src / (spec.itemsize * numel + SCALE_DTYPE.itemsize * n_scales)

@@ -6,9 +6,13 @@ only KV storage, slots own refcounted block tables, prefix hits are
 host-side table writes and decode streams straight out of the pool
 (Pallas paged flash-decoding on TPU); a gather/scatter plane remains as
 the fallback for non-absolute-position layer patterns, and chunked
-prefill rides both. ``TieredKVStore`` + ``HostBlockPool`` add core's
-two-tier semantics: device-pressure victims demote to a host-memory tier
-and promote back on reuse instead of being recomputed.
+prefill rides both. ``TieredKVStore`` + ``HostBlockPool`` +
+``DiskBlockPool`` add core's tiered semantics three rungs deep:
+device-pressure victims demote to a host-memory tier (optionally
+transcoded to int8/fp8 via ``repro.quant`` so the budget holds more
+complete chains per byte), host-pressure victims demote again to a
+file-backed disk tier, and demoted chains promote back on reuse instead
+of being recomputed.
 The front door (PR 6) makes the tier always-on: ``scheduler`` policies
 ({fcfs, decode-first, budgeted}) divide each step's prefill work against
 decode latency, ``play_trace`` drives an engine or frontend from a timed
@@ -18,6 +22,7 @@ percentiles + goodput-under-deadline on the deterministic virtual clock
 (``StepCostModel``). ``LegacyServeEngine`` and ``ReferencePrefixStore``
 are the frozen pre-optimization baselines the equivalence tests and
 benchmarks measure against."""
+from .disk_pool import DiskBlockPool
 from .engine import Request, ServeEngine
 from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool
@@ -32,7 +37,8 @@ from .sharded import ShardedFrontend, route_prefix
 from .tiered import TieredKVStore
 
 __all__ = ["Request", "ServeEngine", "LegacyServeEngine", "KVBlockPool",
-           "HostBlockPool", "Node", "PrefixStore", "ReferencePrefixStore",
+           "HostBlockPool", "DiskBlockPool", "Node", "PrefixStore",
+           "ReferencePrefixStore",
            "ShardedFrontend", "TieredKVStore", "route_prefix",
            "Scheduler", "FCFSScheduler", "DecodeFirstScheduler",
            "BudgetedScheduler", "make_scheduler", "StepCostModel",

@@ -1,0 +1,60 @@
+"""Disk-backed KV block pool — tier 2 of the serving data plane.
+
+The cheapest rung of the cost hierarchy: one ``np.memmap`` row file per KV
+cache leaf, laid out exactly like ``HostBlockPool``'s buffers
+``(*lead, num_blocks, block_tokens, KV, D)``, so host↔disk demotion is a
+row copy (plus an optional numpy transcode to a narrower dtype) and the
+tiered store's payload stays a single int in every tier. Scale arrays are
+tiny (one f32 per row per layer sub-block) and stay in RAM — only the bulk
+KV bytes live on disk.
+
+Restoring from this tier costs a page-in + host→device transfer, which the
+LERC store prices against prefill recompute: a complete chain here is
+still cheaper to promote than to regenerate, an incomplete one is pure
+waste — the paper's all-or-nothing property applied to the storage ladder.
+
+With ``directory=None`` the files live in a ``TemporaryDirectory`` owned
+by the pool (vanishing with the process); pass ``--disk-dir`` to place
+them on a chosen filesystem. The pool never grows; the tiered store's
+third eviction index frees rows before the byte budget is exceeded.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+from ..quant import QuantSpec
+from .host_pool import HostBlockPool
+
+
+class DiskBlockPool(HostBlockPool):
+    """``HostBlockPool`` whose row buffers are file-backed memmaps.
+
+    Same alloc/free/read_rows/write_rows surface (quantized mode
+    included); only ``_alloc_buffer`` differs.
+    """
+
+    def __init__(self, cache_template, block_tokens: int, num_blocks: int,
+                 quant: Optional[QuantSpec] = None,
+                 directory: Optional[str] = None) -> None:
+        if directory is None:
+            self._tmpdir = tempfile.TemporaryDirectory(
+                prefix="repro-kv-disk-")
+            directory = self._tmpdir.name
+        else:
+            os.makedirs(directory, exist_ok=True)
+            self._tmpdir = None
+        self.directory = directory
+        self._n_files = 0
+        super().__init__(cache_template, block_tokens, num_blocks,
+                         quant=quant)
+
+    def _alloc_buffer(self, shape, dtype) -> np.ndarray:
+        path = os.path.join(self.directory, f"leaf{self._n_files}.kv")
+        self._n_files += 1
+        if any(d == 0 for d in shape):      # zero-row pool: no file
+            return np.zeros(shape, dtype)
+        return np.memmap(path, dtype=dtype, mode="w+", shape=shape)

@@ -56,6 +56,7 @@ import numpy as np
 from ..models import decode_step, init_decode_cache
 from ..models.common import ModelConfig
 from ..sharding import KVShardCtx, serve_tp_context
+from .disk_pool import DiskBlockPool
 from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool, chain_block_nbytes
 from .prefix_store import PrefixStore
@@ -254,11 +255,20 @@ class ServeEngine:
         if isinstance(self.store, TieredKVStore):
             # tier 1: host-side pool sized to the store's host byte budget
             # (0 rows when the tier is disabled — the store then behaves
-            # op-for-op like a plain PrefixStore)
-            self.store.attach_pools(
-                self.pool,
-                HostBlockPool.for_device_pool(template, self.pool,
-                                              self.store.host_capacity))
+            # op-for-op like a plain PrefixStore). With a quant format the
+            # pool stores transcoded rows, so the same budget holds
+            # ~itemsize-ratio more blocks. Tier 2, when budgeted, is a
+            # memmap pool mirroring the host layout.
+            host_pool = HostBlockPool.for_device_pool(
+                template, self.pool, self.store.host_capacity,
+                quant=self.store.quant)
+            disk_pool = None
+            if self.store.disk_capacity > 0:
+                disk_pool = DiskBlockPool.for_device_pool(
+                    template, self.pool, self.store.disk_capacity,
+                    quant=self.store.disk_quant,
+                    directory=self.store.disk_dir)
+            self.store.attach_pools(self.pool, host_pool, disk_pool)
         else:
             self.store.evict_payload = self.pool.free
 
@@ -644,4 +654,23 @@ class ServeEngine:
                 "host_blocks_in_use": hp.blocks_in_use,
                 "host_high_water": hp.high_water,
             })
+            if self.store.quant is not None:
+                # per-tier occupancy in BYTES + the transcode economics:
+                # how many blocks one host byte buys vs the lossless tier
+                m.update({
+                    "kv_quant": self.store.quant.name,
+                    "host_block_nbytes": hp.block_nbytes,
+                    "host_bytes_in_use": hp.bytes_in_use,
+                    "host_compression_ratio": (
+                        self.pool.block_nbytes / max(hp.block_nbytes, 1)),
+                })
+            dp = self.store.disk_pool
+            if dp is not None:
+                m.update({
+                    "disk_blocks": dp.num_blocks,
+                    "disk_blocks_in_use": dp.blocks_in_use,
+                    "disk_high_water": dp.high_water,
+                    "disk_block_nbytes": dp.block_nbytes,
+                    "disk_bytes_in_use": dp.bytes_in_use,
+                })
         return m

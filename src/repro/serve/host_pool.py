@@ -6,6 +6,15 @@ KV, D)``, plus a free list of row indices. A demoted prefix-cache block
 occupies ONE row across every leaf, so the tiered store's payloads stay
 single ints in both tiers.
 
+PR 8 adds a **quantized mode**: with a ``quant`` spec the buffers store
+1-byte elements (int8 / float8_e4m3fn) plus one f32 scale per
+(row, layer-sub-block), and rows are exchanged with the device pool in
+``KVBlockPool.read_rows(quant=...)``'s ``(blocks, scales)`` pair format.
+``block_nbytes`` then prices the *transcoded* row — a byte budget buys
+``compression_ratio``-times more blocks, which is the whole point: the
+paper's all-or-nothing property makes complete chains per byte, not raw
+bytes, the capacity that matters.
+
 Unlike the device pool this tier never grows: its size is the operator's
 ``--host-cache-kb`` budget, and the tiered store's second eviction index
 frees rows before the byte budget is exceeded (blocks are uniform-size, so
@@ -16,38 +25,63 @@ keeps demotion/promotion copies from churning the allocator either way.
 """
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 import jax
 import numpy as np
 
-from .kv_pool import KVBlockPool, _pool_leaf_shape, _row_axis
+from .. import quant as quantlib
+from ..quant import QuantSpec
+from .kv_pool import (KVBlockPool, _pool_leaf_shape, _row_axis,
+                      quant_chain_block_nbytes)
 
 
 class HostBlockPool:
     """Preallocated host-side paged block pool over an engine's KV cache
-    pytree. Rows are exchanged with a ``KVBlockPool`` via its
-    ``read_rows``/``write_rows`` stacked-block format."""
+    pytree, optionally storing rows quantized. Rows are exchanged with a
+    ``KVBlockPool`` via its ``read_rows``/``write_rows`` stacked-block
+    format (the ``(blocks, scales)`` pair variant when quantized)."""
 
-    def __init__(self, cache_template, block_tokens: int,
-                 num_blocks: int) -> None:
+    def __init__(self, cache_template, block_tokens: int, num_blocks: int,
+                 quant: Optional[QuantSpec] = None) -> None:
         self.block_tokens = block_tokens
         self.num_blocks = max(int(num_blocks), 0)
+        self.quant = quant
         self.buffers = jax.tree.map(
-            lambda leaf: np.zeros(
+            lambda leaf: self._alloc_buffer(
                 _pool_leaf_shape(leaf.shape, self.num_blocks, block_tokens),
-                leaf.dtype),
+                quant.dtype if quant is not None else leaf.dtype),
             cache_template)
+        if quant is not None:
+            # one f32 scale per (row, *lead) sub-block; tiny, always RAM
+            self.scales = jax.tree.map(
+                lambda leaf: np.zeros((self.num_blocks,) + leaf.shape[:-4],
+                                      quantlib.SCALE_DTYPE),
+                cache_template)
+        else:
+            self.scales = None
+        self.block_nbytes = quant_chain_block_nbytes(
+            cache_template, block_tokens, quant)
         self.free_list: List[int] = list(range(self.num_blocks - 1, -1, -1))
         self.high_water = 0           # max rows ever simultaneously in use
 
+    # subclass hook: DiskBlockPool swaps np.zeros for an np.memmap
+    def _alloc_buffer(self, shape, dtype) -> np.ndarray:
+        return np.zeros(shape, dtype)
+
     @classmethod
     def for_device_pool(cls, cache_template, device_pool: KVBlockPool,
-                        capacity_bytes: int) -> "HostBlockPool":
-        """Size a host pool to a byte budget, in whole blocks of the same
-        shape as ``device_pool``'s rows."""
-        num = capacity_bytes // max(device_pool.block_nbytes, 1)
-        return cls(cache_template, device_pool.block_tokens, num)
+                        capacity_bytes: int,
+                        quant: Optional[QuantSpec] = None,
+                        **kwargs) -> "HostBlockPool":
+        """Size a pool to a byte budget, in whole blocks priced at the
+        TRANSCODED row size — the same budget holds ~``itemsize`` times
+        more blocks when quantized."""
+        blk = quant_chain_block_nbytes(cache_template,
+                                       device_pool.block_tokens, quant)
+        num = capacity_bytes // max(blk, 1)
+        return cls(cache_template, device_pool.block_tokens, num,
+                   quant=quant, **kwargs)
 
     # -------------------------------------------------------------- indices
     def alloc(self) -> int:
@@ -62,23 +96,35 @@ class HostBlockPool:
     def blocks_in_use(self) -> int:
         return self.num_blocks - len(self.free_list)
 
+    @property
+    def bytes_in_use(self) -> int:
+        return self.blocks_in_use * self.block_nbytes
+
     # ------------------------------------------------------------ transfers
     def read_rows(self, idxs: List[int]):
         """Stacked per-leaf copies of rows ``idxs`` (numpy fancy indexing
         copies), row axis leading — the host half of a promotion; feed the
-        result to ``KVBlockPool.write_rows``."""
+        result to ``KVBlockPool.write_rows``. Quantized pools return the
+        ``(blocks, scales)`` pair the device scatter dequantizes from."""
         sel = np.asarray(idxs, np.int64)
 
         def take(hbuf):
             lead = _row_axis(hbuf)
             return np.moveaxis(np.take(hbuf, sel, axis=lead), lead, 0)
 
-        return jax.tree.map(take, self.buffers)
+        blocks = jax.tree.map(take, self.buffers)
+        if self.quant is None:
+            return blocks
+        return blocks, jax.tree.map(lambda s: s[sel], self.scales)
 
-    def write_rows(self, idxs: List[int], host_blocks) -> None:
+    def write_rows(self, idxs: List[int], host_blocks,
+                   scales=None) -> None:
         """Store stacked per-leaf block arrays (``KVBlockPool.read_rows``
         output, row axis leading) into rows ``idxs`` — the host half of a
-        demotion."""
+        demotion. Quantized pools additionally store the per-row
+        ``scales`` pytree the transcoding read produced."""
+        assert (scales is None) == (self.quant is None), \
+            "scales must accompany writes exactly when the pool quantizes"
         sel = np.asarray(idxs, np.int64)
 
         def put(hbuf, blk):
@@ -88,3 +134,6 @@ class HostBlockPool:
                                    0, lead)
 
         jax.tree.map(put, self.buffers, host_blocks)
+        if scales is not None:
+            jax.tree.map(lambda sbuf, s: sbuf.__setitem__(sel, s),
+                         self.scales, scales)

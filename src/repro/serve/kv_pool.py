@@ -30,10 +30,13 @@ indices before that happens.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, List, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from .. import quant as quantlib
+from ..quant import QuantSpec
 
 
 def _pool_leaf_shape(leaf_shape: Tuple[int, ...], num_blocks: int,
@@ -54,6 +57,26 @@ def chain_block_nbytes(cache_template, block_tokens: int) -> int:
     return sum(leaf.nbytes // (leaf.shape[-4] * leaf.shape[-3])
                * block_tokens
                for leaf in jax.tree.leaves(cache_template))
+
+
+def quant_chain_block_nbytes(cache_template, block_tokens: int,
+                             spec: Optional[QuantSpec]) -> int:
+    """Bytes of ONE *transcoded* chain block: narrow payload plus one f32
+    scale per (layer-stack) sub-block of every leaf. This is the number a
+    quantized tier's byte budget divides by — the whole capacity-per-byte
+    win of the compressed hierarchy is this quantity shrinking."""
+    if spec is None:
+        return chain_block_nbytes(cache_template, block_tokens)
+    total = 0
+    for leaf in jax.tree.leaves(cache_template):
+        lead_numel = 1
+        for d in leaf.shape[:-4]:
+            lead_numel *= d
+        block_numel = (lead_numel * block_tokens
+                       * leaf.shape[-2] * leaf.shape[-1])
+        total += (spec.itemsize * block_numel
+                  + quantlib.SCALE_DTYPE.itemsize * lead_numel)
+    return total
 
 
 @partial(jax.jit, donate_argnums=0)
@@ -86,6 +109,41 @@ def _read_rows(pool, idxs):
         return jnp.moveaxis(jnp.take(pbuf, idxs, axis=lead), lead, 0)
 
     return jax.tree.map(read, pool)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def _read_rows_quant(pool, idxs, spec):
+    """Gather + quantize in one dispatch: pool rows ``idxs`` come back as
+    ``(blocks, scales)`` pytrees — blocks in ``spec.dtype`` shaped
+    ``(n, *lead, bt, KV, D)``, f32 scales shaped ``(n, *lead)`` (one per
+    layer sub-block). On a sharded pool the amax reduction spans the KV
+    shards (an exact max all-reduce), so every replica would compute the
+    identical scale. Only the narrow bytes + scales then cross to host."""
+
+    def read(pbuf):
+        lead = _row_axis(pbuf)
+        rows = jnp.moveaxis(jnp.take(pbuf, idxs, axis=lead), lead, 0)
+        return quantlib.quantize_blocks(rows, spec)
+
+    pairs = jax.tree.map(read, pool)
+    is_pair = lambda t: isinstance(t, tuple)                      # noqa: E731
+    return (jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair),
+            jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair))
+
+
+@partial(jax.jit, donate_argnums=0)
+def _write_rows_dequant(pool, blocks, scales, idxs):
+    """Dequantize + scatter in one dispatch — the device half of a
+    promotion from a quantized tier. The narrow bytes cross the PCIe
+    boundary; widening happens on device."""
+
+    def write(pbuf, blk, sc):
+        lead = _row_axis(pbuf)
+        wide = quantlib.dequantize_blocks(blk, sc, pbuf.dtype)
+        ix = (slice(None),) * lead + (idxs,)
+        return pbuf.at[ix].set(jnp.moveaxis(wide, 0, lead))
+
+    return jax.tree.map(write, pool, blocks, scales)
 
 
 @partial(jax.jit, donate_argnums=0)
@@ -271,21 +329,53 @@ class KVBlockPool:
     # number of rows moved: demotion batches are bounded by the victims of
     # one _make_room call and promotion batches by max_seq / block_tokens,
     # so the trace cache stays small.
-    def read_rows(self, idxs: List[int]):
+    def read_rows(self, idxs: List[int], quant: Optional[QuantSpec] = None):
         """Copy pool rows ``idxs`` to host memory: one jitted gather per
         leaf, then a single device_get of the stacked result. Returns a
-        pytree of numpy arrays shaped ``(len(idxs), *lead, bt, KV, D)``."""
-        return jax.device_get(
-            _read_rows(self.buffers, jnp.asarray(idxs, jnp.int32)))
+        pytree of numpy arrays shaped ``(len(idxs), *lead, bt, KV, D)``.
 
-    def write_rows(self, idxs: List[int], host_blocks) -> None:
+        With ``quant`` the gather *transcodes*: rows quantize on device
+        (per-layer-per-block f32 scales over each leaf's trailing
+        ``(bt, KV, D)`` axes) and the return value is a ``(blocks,
+        scales)`` pair of pytrees — only 1-byte elements plus the tiny
+        scale arrays cross the device boundary."""
+        sel = jnp.asarray(idxs, jnp.int32)
+        if quant is None:
+            return jax.device_get(_read_rows(self.buffers, sel))
+        return jax.device_get(_read_rows_quant(self.buffers, sel, quant))
+
+    def write_rows(self, idxs: List[int], host_blocks,
+                   scales=None) -> None:
         """Scatter host-side stacked block arrays (the pytree shape
         ``read_rows`` returns) into pool rows ``idxs``. The host→device
         transfer happens inside the jit call; on a sharded pool the
         stacked rows are committed to the matching KV-head sharding first
         (each device receives only its head slice — the host tier itself
-        stays global-shape and device-invariant)."""
-        if self.shard_ctx is not None:
-            host_blocks = jax.tree.map(self._committed, host_blocks)
-        self.buffers = _write_rows(self.buffers, host_blocks,
-                                   jnp.asarray(idxs, jnp.int32))
+        stays global-shape and device-invariant).
+
+        With ``scales`` (the pair a quantized-tier read produced) the
+        scatter dequantizes on device after the narrow bytes cross.
+        Either way the whole batch commits as ONE ``device_put`` of the
+        stacked pytree (leaf transfers batched in a single call, not one
+        per leaf) + one jitted scatter, regardless of leaf count — the
+        store counts these dispatches as ``promotion_dispatches``."""
+        sel = jnp.asarray(idxs, jnp.int32)
+        if self.shard_ctx is None:
+            host_blocks = jax.device_put(host_blocks)
+        else:
+            host_blocks = jax.device_put(
+                host_blocks,
+                jax.tree.map(lambda a: self.shard_ctx.pool_sharding(a.ndim),
+                             host_blocks))
+        if scales is None:
+            self.buffers = _write_rows(self.buffers, host_blocks, sel)
+            return
+        if self.shard_ctx is None:
+            scales = jax.device_put(scales)
+        else:
+            # scales are per-(row, layer) — no KV dim; replicate them.
+            rep = self.shard_ctx.replicated()
+            scales = jax.device_put(scales,
+                                    jax.tree.map(lambda _: rep, scales))
+        self.buffers = _write_rows_dequant(self.buffers, host_blocks,
+                                           scales, sel)

@@ -67,9 +67,11 @@ class Node:
     payload: Any = None                  # per-layer KV arrays (host)
     nbytes: int = 0
     resident: bool = False               # in the FAST tier (device pool)
-    # slow-tier payload (serve.TieredKVStore: a HostBlockPool row). Always
-    # None in a plain single-tier store; a node holds at most one tier.
+    # slow-tier payloads (serve.TieredKVStore: a HostBlockPool row / a
+    # DiskBlockPool row). Always None in a plain single-tier store; a node
+    # holds at most one tier.
     host_payload: Any = None
+    disk_payload: Any = None
     children: Dict[TokenBlock, "Node"] = field(default_factory=dict)
     uid: int = 0
 
@@ -200,6 +202,7 @@ class PrefixStore:
         """A skeleton node with nothing keeping it alive: not resident in
         any tier, childless, and free of pending references."""
         return (not node.resident and node.host_payload is None
+                and node.disk_payload is None
                 and not node.children
                 and self.state.ref_count.get(node.block_id, 0) == 0)
 

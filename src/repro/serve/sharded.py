@@ -31,6 +31,7 @@ restore means K-shard output is token-identical to the single engine
 from __future__ import annotations
 
 import hashlib
+import os
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core import (BlockMeta, CacheMetrics, JobDAG, MessageBus, PeerTracker,
@@ -65,6 +66,9 @@ class ShardedFrontend:
                  prefill_chunk: int = 8,
                  pool_blocks: Optional[int] = None,
                  host_capacity_bytes: int = 0,
+                 kv_quant: Optional[str] = None,
+                 disk_capacity_bytes: int = 0,
+                 disk_dir: Optional[str] = None,
                  paged: bool = False,
                  record_eviction_log: bool = False,
                  scheduler: Union[str, Scheduler, None] = None,
@@ -88,7 +92,12 @@ class ShardedFrontend:
             if host_capacity_bytes > 0:
                 store: PrefixStore = TieredKVStore(
                     capacity_bytes, policy, block_tokens=block_tokens,
-                    host_capacity_bytes=host_capacity_bytes)
+                    host_capacity_bytes=host_capacity_bytes,
+                    kv_quant=kv_quant,
+                    disk_capacity_bytes=disk_capacity_bytes,
+                    # each shard's memmap files live in their own subdir
+                    disk_dir=(os.path.join(disk_dir, f"shard{k}")
+                              if disk_dir else None))
             else:
                 store = PrefixStore(capacity_bytes, policy,
                                     block_tokens=block_tokens)
@@ -255,6 +264,15 @@ class ShardedFrontend:
             out["host_blocks_in_use"] = sum(p.blocks_in_use
                                             for p in host_pools)
             out["host_high_water"] = sum(p.high_water for p in host_pools)
+        disk_pools = [e.store.disk_pool for e in self.shards
+                      if getattr(e.store, "disk_pool", None) is not None]
+        if disk_pools:
+            out["disk_used_bytes"] = sum(getattr(e.store, "disk_used", 0)
+                                         for e in self.shards)
+            out["disk_blocks"] = sum(p.num_blocks for p in disk_pools)
+            out["disk_blocks_in_use"] = sum(p.blocks_in_use
+                                            for p in disk_pools)
+            out["disk_high_water"] = sum(p.high_water for p in disk_pools)
         for field in ("steps", "prefill_tokens", "prefill_tokens_skipped",
                       "decoded_tokens", "rejected", "cancellations"):
             out[field if field != "steps" else "engine_steps"] = \

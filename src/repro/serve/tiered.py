@@ -1,16 +1,27 @@
-"""Tiered KV store: LERC-aware demotion to a host-memory tier (PR 4).
+"""Tiered KV store: LERC-aware demotion down a compressed storage ladder.
 
 ``core`` honors the paper's all-or-nothing property with a two-tier
 MemoryTier/DiskTier store: eviction moves a block to the slow tier, and a
 task only speeds up when *every* peer sits in the fast tier. This module
-gives the serving data plane the same shape. Tier 0 is the device-resident
-``KVBlockPool``; tier 1 is a preallocated ``HostBlockPool``. Under device
-pressure a prefix-cache block *demotes* — one jitted device→host row copy —
-instead of dying, and a later lookup that walks over demoted blocks
-*promotes* the usable chain back with a host→device scatter, paying a copy
-instead of a prefill recompute.
+gives the serving data plane the same shape, now three rungs deep. Tier 0
+is the device-resident ``KVBlockPool``; tier 1 is a preallocated
+``HostBlockPool``; tier 2 (PR 8) is a file-backed ``DiskBlockPool``.
+Under device pressure a prefix-cache block *demotes* — one jitted
+device→host row copy — instead of dying; under host pressure it demotes
+*again* to disk; and a later lookup that walks over demoted blocks
+promotes the usable chain back to the device pool, paying a copy (and a
+dequantize) instead of a prefill recompute.
 
-Placement policy is the paper's machinery twice over:
+**Demotion transcodes** (PR 8): with ``kv_quant`` set, the device→host
+copy quantizes rows on device (``repro.quant`` per-layer-per-block
+scales) so the host budget holds ~``itemsize``-ratio more blocks — the
+paper's lever is complete chains per byte, and narrowing the dtype is the
+cheapest way to buy more of them. The host→disk hop can narrow again
+(``disk_quant``); promotion dequantizes inside the device scatter jit.
+With ``kv_quant`` "none" every path is the lossless copy it was in PR 4,
+bit-identical to the pre-PR engine.
+
+Placement policy is the paper's machinery three times over:
 
 * **Demotion victims** are chosen by the store's existing
   ``Policy``/``EvictionIndex`` over the shared ``DagState`` counters — so
@@ -19,12 +30,17 @@ Placement policy is the paper's machinery twice over:
   tier-0-only: a partially demoted chain is "incomplete" in the paper's
   sense and pays the max-over-blocks promotion copy before it is usable —
   the all-or-nothing bottleneck, now one tier down.
-* **Final eviction out of the host tier** runs a second policy-driven
-  ``EvictionIndex`` over the same counters. A demoted block is never in
+* **Host-tier eviction** runs a second policy-driven ``EvictionIndex``
+  over the same counters; its victims demote to disk when a disk tier is
+  configured, and die otherwise. A demoted block is never in
   ``DagState.cached``, so every peer group through it is incomplete and a
   completeness-aware key degrades gracefully to (reference count,
-  recency) — host retention follows who still *references* a chain, not
-  who recently used it.
+  recency) — retention follows who still *references* a chain.
+* **Disk-tier eviction** is a THIRD index over the very same counters:
+  the final death, back to recomputable-by-prefill. The ladder orders
+  blocks by restore cost (table write ≪ host copy ≪ disk page-in ≪
+  recompute), and each rung's policy independently keeps the chains
+  cheapest to complete at that rung.
 
 Tier-0 state transitions (demotion = eviction from the fast tier) keep
 the exact event stream the single-tier store emits: same
@@ -32,32 +48,46 @@ the exact event stream the single-tier store emits: same
 ``on_evict``/``on_status`` coordination hooks — so a sharded frontend
 with tiered shards stays replica-coherent with no protocol changes, and
 with the host tier disabled this class is op-for-op a ``PrefixStore``.
+Tier 1→2 movement touches no ``DagState`` (the block already left
+``cached``), so the slow rungs stay invisible to the coordination plane.
 """
 from __future__ import annotations
 
 from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
+from .. import quant as quantlib
 from ..core import EvictionIndex, Policy, make_policy
+from ..quant import QuantSpec
+from .disk_pool import DiskBlockPool
 from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool
 from .prefix_store import Node, PrefixStore
 
 
 class TieredKVStore(PrefixStore):
-    """Two-tier prefix store: device pool (tier 0) + host pool (tier 1).
+    """Three-tier prefix store: device pool (tier 0) + host pool (tier 1)
+    + optional disk pool (tier 2), with optional transcoding demotion.
 
-    Construct like a ``PrefixStore`` plus a host-tier byte budget; the
-    engine attaches the actual pools (it owns the cache template) via
-    ``attach_pools``. With ``host_capacity_bytes == 0`` (or no pools
-    attached) every code path delegates to the base class, bit-identical
-    to a single-tier store.
+    Construct like a ``PrefixStore`` plus per-tier byte budgets and quant
+    formats; the engine attaches the actual pools (it owns the cache
+    template) via ``attach_pools``, building them from this store's
+    ``quant``/``disk_quant``/``disk_capacity``/``disk_dir`` settings.
+    With ``host_capacity_bytes == 0`` (or no pools attached) every code
+    path delegates to the base class, bit-identical to a single-tier
+    store; with ``kv_quant="none"`` and no disk tier it is bit-identical
+    to the PR 4 two-tier store.
     """
 
     def __init__(self, capacity_bytes: int,
                  policy: Union[str, Policy] = "lerc",
                  block_tokens: int = 16, *,
                  host_capacity_bytes: int = 0,
-                 host_policy: Union[str, Policy, None] = None) -> None:
+                 host_policy: Union[str, Policy, None] = None,
+                 kv_quant: Union[str, QuantSpec, None] = None,
+                 disk_capacity_bytes: int = 0,
+                 disk_policy: Union[str, Policy, None] = None,
+                 disk_quant: Union[str, QuantSpec, None] = None,
+                 disk_dir: Optional[str] = None) -> None:
         super().__init__(capacity_bytes, policy, block_tokens=block_tokens)
         self.host_capacity = host_capacity_bytes
         self.host_used = 0
@@ -67,20 +97,40 @@ class TieredKVStore(PrefixStore):
             host_policy = make_policy(host_policy)
         self.host_policy = host_policy
         self.host_index = EvictionIndex(self.host_policy, self.state)
+        # transcode formats: ``quant`` narrows the device→host hop;
+        # ``disk_quant`` the host→disk hop (None = inherit the host format,
+        # so a lossless host tier gets a lossless disk tier by default)
+        self.quant = quantlib.get_spec(kv_quant)
+        self.disk_quant = (self.quant if disk_quant is None
+                           else quantlib.get_spec(disk_quant))
+        self.disk_capacity = disk_capacity_bytes
+        self.disk_used = 0
+        self.disk_dir = disk_dir
+        if disk_policy is None:
+            disk_policy = make_policy(self.policy.name)
+        elif isinstance(disk_policy, str):
+            disk_policy = make_policy(disk_policy)
+        self.disk_policy = disk_policy
+        self.disk_index = EvictionIndex(self.disk_policy, self.state)
         self.device_pool: Optional[KVBlockPool] = None
         self.host_pool: Optional[HostBlockPool] = None
+        self.disk_pool: Optional[DiskBlockPool] = None
         self.host_eviction_log: List[str] = []
+        self.disk_eviction_log: List[str] = []
         # demotions batched per ``_make_room`` call: (device row, host row).
         # Victim selection interleaves with per-victim state updates, but
-        # the byte movement happens in ONE jitted gather + device_get at
-        # the end of the batch, before any freed device row can be reused.
+        # the byte movement happens in ONE jitted gather (+ on-device
+        # quantize) + device_get at the end of the batch, before any freed
+        # device row can be reused.
         self._pending_demotions: List[Tuple[int, int]] = []
 
     # --------------------------------------------------------------- wiring
     def attach_pools(self, device_pool: KVBlockPool,
-                     host_pool: HostBlockPool) -> None:
+                     host_pool: HostBlockPool,
+                     disk_pool: Optional[DiskBlockPool] = None) -> None:
         self.device_pool = device_pool
         self.host_pool = host_pool
+        self.disk_pool = disk_pool
         # fallback/final device evictions still free pool rows directly
         self.evict_payload = device_pool.free
 
@@ -89,46 +139,67 @@ class TieredKVStore(PrefixStore):
         return (self.host_capacity > 0 and self.host_pool is not None
                 and self.host_pool.num_blocks > 0)
 
+    @property
+    def disk_tiered(self) -> bool:
+        return (self.disk_capacity > 0 and self.disk_pool is not None
+                and self.disk_pool.num_blocks > 0)
+
+    def _host_nbytes(self, node: Node) -> int:
+        """Bytes one block charges against the host budget. Quantized
+        tiers price the transcoded row (the capacity-per-byte win);
+        lossless tiers keep pricing the device byte size — bit-identical
+        accounting to the pre-quant store."""
+        if self.quant is None:
+            return node.nbytes
+        return self.host_pool.block_nbytes
+
     # ---------------------------------------------------------------- reads
     def lookup(self, tokens: Sequence[int]) -> List[Node]:
-        """Longest chain resident in *either* tier from the root; demoted
+        """Longest chain resident in *any* tier from the root; demoted
         blocks on it are promoted back to the device pool before the chain
         is returned, so callers always receive tier-0 payloads.
 
-        Metrics follow the paper's definitions one tier down: a hit is
-        presence in any tier (``tier1_hits`` counts the slow-tier slice),
-        but a hit is *effective* only when every block up to it sits in
-        tier 0 — a partially demoted chain pays the promotion copy."""
+        Metrics follow the paper's definitions down the ladder: a hit is
+        presence in any tier (``tier1_hits``/``tier2_hits`` count the
+        slow-tier slices), but a hit is *effective* only when every block
+        up to it sits in tier 0 — a partially demoted chain pays the
+        promotion copy."""
         if not self.tiered:
             return super().lookup(tokens)
         chain = self._walk(tokens)
         usable: List[Node] = []
         touched_t0: List[Node] = []
         touched_t1: List[Node] = []
+        touched_t2: List[Node] = []
         broken = False
         all_t0 = True
         for node in chain:
             in_t0 = node.resident
             in_t1 = node.host_payload is not None
-            hit = in_t0 or in_t1
+            in_t2 = node.disk_payload is not None
+            hit = in_t0 or in_t1 or in_t2
             if not hit:
                 broken = True
-            if in_t1:
+            if not in_t0:
                 all_t0 = False
             self.metrics_obj.record_access(
                 hit=hit, effective=hit and not broken and all_t0,
-                tier=1 if in_t1 else 0)
+                tier=1 if in_t1 else (2 if in_t2 else 0))
             if hit and not broken:
                 usable.append(node)
             if in_t0:
                 touched_t0.append(node)
             elif in_t1:
                 touched_t1.append(node)
-        for node in reversed(touched_t1):         # leaf first, root last
+            else:
+                touched_t2.append(node)
+        for node in reversed(touched_t2):         # leaf first, root last
+            self.disk_policy.on_access(node.block_id)
+        for node in reversed(touched_t1):
             self.host_policy.on_access(node.block_id)
         for node in reversed(touched_t0):
             self.policy.on_access(node.block_id)
-        demoted = [n for n in usable if n.host_payload is not None]
+        demoted = [n for n in usable if not n.resident]
         if demoted:
             self._promote(demoted, exclude={n.block_id for n in chain})
         return usable
@@ -137,8 +208,10 @@ class TieredKVStore(PrefixStore):
     def _pre_insert(self, node: Node) -> None:
         if node.host_payload is not None:
             # the chain broke upstream of this block, so the engine
-            # recomputed it; the fresh KV supersedes the host copy
+            # recomputed it; the fresh KV supersedes the slow-tier copy
             self._release_host(node)
+        if node.disk_payload is not None:
+            self._release_disk(node)
 
     # ----------------------------------------------------- tier-0 pressure
     def _make_room(self, needed: int, exclude: set) -> None:
@@ -148,14 +221,19 @@ class TieredKVStore(PrefixStore):
     def _evict(self, node: Node) -> None:
         """Tier-0 eviction under tiering is a *demotion*: identical
         store-visible event stream (eviction log, counter flips,
-        coordination hooks), but the payload moves to the host pool
-        instead of dying. Falls back to a true eviction when the host
-        tier cannot hold the block."""
+        coordination hooks), but the payload moves to the host pool —
+        quantized when the store transcodes — instead of dying. When the
+        host tier cannot hold the block it skips straight to the disk
+        rung; a true eviction only when every lower tier is out of
+        room."""
         if not self.tiered:
             return super()._evict(node)
-        self._make_host_room(node.nbytes)
-        if (self.host_used + node.nbytes > self.host_capacity
+        hbytes = self._host_nbytes(node)
+        self._make_host_room(hbytes)
+        if (self.host_used + hbytes > self.host_capacity
                 or not self.host_pool.free_list):
+            if self._demote_past_host(node):
+                return
             return super()._evict(node)
         host_idx = self.host_pool.alloc()
         self._pending_demotions.append((node.payload, host_idx))
@@ -163,7 +241,7 @@ class TieredKVStore(PrefixStore):
         node.payload = None
         node.resident = False
         self.used -= node.nbytes
-        self.host_used += node.nbytes
+        self.host_used += hbytes
         self.metrics_obj.evictions += 1
         self.metrics_obj.demotions += 1
         self.eviction_log.append(node.block_id)
@@ -179,13 +257,59 @@ class TieredKVStore(PrefixStore):
         if self.on_evict is not None:
             self.on_evict(node.block_id, flipped)
 
+    def _demote_past_host(self, node: Node) -> bool:
+        """Device victim straight to the disk rung, skipping a host tier
+        with no free row — which happens whenever every host row belongs
+        to blocks an in-flight promotion is about to vacate. Emits the
+        exact tier-0 eviction event stream of a host demotion; only the
+        landing tier differs."""
+        if not self.disk_tiered:
+            return False
+        dbytes = self.disk_pool.block_nbytes
+        self._make_disk_room(dbytes)
+        if (self.disk_used + dbytes > self.disk_capacity
+                or not self.disk_pool.free_list):
+            return False
+        out = self.device_pool.read_rows([node.payload], quant=self.quant)
+        blocks, scales = out if self.quant is not None else (out, None)
+        blocks, scales = quantlib.transcode_tree_np(
+            blocks, scales, self.quant, self.disk_quant)
+        if self.disk_quant is not None:
+            self.metrics_obj.quantized_demotions += 1
+        disk_idx = self.disk_pool.alloc()
+        self.disk_pool.write_rows([disk_idx], blocks, scales)
+        self.device_pool.free(node.payload)
+        node.disk_payload = disk_idx
+        node.payload = None
+        node.resident = False
+        self.used -= node.nbytes
+        self.disk_used += dbytes
+        self.metrics_obj.evictions += 1
+        self.metrics_obj.demotions += 1
+        self.metrics_obj.disk_demotions += 1
+        self.eviction_log.append(node.block_id)
+        self.index.discard(node.block_id)
+        self.policy.on_remove(node.block_id)
+        flipped = self.state.on_evicted(node.block_id)
+        self.disk_policy.on_insert(node.block_id)
+        self.disk_index.add(node.block_id)
+        if self.on_evict is not None:
+            self.on_evict(node.block_id, flipped)
+        return True
+
     def _flush_demotions(self) -> None:
         if not self._pending_demotions:
             return
         dev = [d for d, _ in self._pending_demotions]
         host = [h for _, h in self._pending_demotions]
         self._pending_demotions = []
-        self.host_pool.write_rows(host, self.device_pool.read_rows(dev))
+        if self.quant is None:
+            self.host_pool.write_rows(host, self.device_pool.read_rows(dev))
+        else:
+            blocks, scales = self.device_pool.read_rows(dev,
+                                                        quant=self.quant)
+            self.host_pool.write_rows(host, blocks, scales)
+            self.metrics_obj.quantized_demotions += len(dev)
         for d in dev:
             self.device_pool.free(d)
 
@@ -209,25 +333,29 @@ class TieredKVStore(PrefixStore):
                 break
         self.host_pool.free(hp)
         node.host_payload = None
-        self.host_used -= node.nbytes
-        node.nbytes = 0
+        self.host_used -= self._host_nbytes(node)
         self.host_index.discard(node.block_id)
         self.host_policy.on_remove(node.block_id)
 
     def _evict_host(self, node: Node) -> None:
-        """Final eviction: the block leaves the system entirely (back to
-        recomputable-by-prefill). No ``DagState`` transition — a demoted
-        block was already out of ``cached`` — so no counter or label
-        changes, and nothing to coordinate."""
+        """Host-tier eviction: demote once more to the disk rung when one
+        is configured and has (or can make) room; otherwise the block
+        leaves the system entirely (back to recomputable-by-prefill).
+        Either way no ``DagState`` transition — a demoted block was
+        already out of ``cached`` — so no counter or label changes, and
+        nothing to coordinate."""
+        if self._demote_to_disk(node):
+            return
         self._release_host(node)
+        node.nbytes = 0
         self.metrics_obj.host_evictions += 1
         self.host_eviction_log.append(node.block_id)
         self._gc_upward(node)
 
     def _gc_upward(self, node: Node) -> None:
-        """Skeleton GC after a host eviction: unlike ``complete_request``
+        """Skeleton GC after a final eviction: unlike ``complete_request``
         pruning there is no chain list in hand, so walk parent links while
-        nodes are garbage (non-resident in both tiers, childless,
+        nodes are garbage (non-resident in every tier, childless,
         unreferenced)."""
         while (node is not None and node.parent is not None
                and self._is_garbage(node)):
@@ -235,28 +363,113 @@ class TieredKVStore(PrefixStore):
             self._forget_node(node)
             node = parent
 
+    # ----------------------------------------------------- tier-2 pressure
+    def _demote_to_disk(self, node: Node) -> bool:
+        """Move a host-tier victim's row to the disk pool, transcoding if
+        the disk format differs. Returns False (caller finishes the kill)
+        when no disk tier is configured or it cannot make room."""
+        if not self.disk_tiered:
+            return False
+        dbytes = self.disk_pool.block_nbytes
+        self._make_disk_room(dbytes)
+        if (self.disk_used + dbytes > self.disk_capacity
+                or not self.disk_pool.free_list):
+            return False
+        # the victim's host row may still be an unflushed pending demotion
+        # (selected by _make_host_room inside the same _make_room batch) —
+        # its bytes must land in host memory before we can read them
+        if any(h == node.host_payload for _, h in self._pending_demotions):
+            self._flush_demotions()
+        out = self.host_pool.read_rows([node.host_payload])
+        blocks, scales = out if self.quant is not None else (out, None)
+        blocks, scales = quantlib.transcode_tree_np(
+            blocks, scales, self.quant, self.disk_quant)
+        if self.disk_quant is not None and self.disk_quant != self.quant:
+            self.metrics_obj.quantized_demotions += 1
+        disk_idx = self.disk_pool.alloc()
+        self.disk_pool.write_rows([disk_idx], blocks, scales)
+        self._release_host(node)
+        node.disk_payload = disk_idx
+        self.disk_used += dbytes
+        self.metrics_obj.disk_demotions += 1
+        self.disk_policy.on_insert(node.block_id)
+        self.disk_index.add(node.block_id)
+        return True
+
+    def _make_disk_room(self, needed: int) -> None:
+        while self.disk_used + needed > self.disk_capacity:
+            victim = self.disk_index.pop_min()
+            if victim is None:
+                return
+            self._evict_disk(self._nodes[victim])
+
+    def _release_disk(self, node: Node) -> None:
+        """Free a node's disk row (no eviction event)."""
+        self.disk_pool.free(node.disk_payload)
+        node.disk_payload = None
+        self.disk_used -= self.disk_pool.block_nbytes
+        self.disk_index.discard(node.block_id)
+        self.disk_policy.on_remove(node.block_id)
+
+    def _evict_disk(self, node: Node) -> None:
+        """The ladder's last rung: the block dies for real."""
+        self._release_disk(node)
+        node.nbytes = 0
+        self.metrics_obj.disk_evictions += 1
+        self.disk_eviction_log.append(node.block_id)
+        self._gc_upward(node)
+
     # ------------------------------------------------------------ promotion
     def _promote(self, nodes: List[Node], exclude: Set[str]) -> None:
         """Bring demoted blocks back on-device: make tier-0 room (which may
         demote colder blocks — the whole looked-up chain is excluded), then
-        one host→device scatter for the batch. Mirrors
+        ONE host→device transfer + scatter per source tier for the batch
+        (``promotion_dispatches``), dequantizing on device when the source
+        tier is transcoded. Disk rows promote straight to the device pool —
+        their bytes stream through host RAM, not through host-pool rows, so
+        a promotion never needs host-tier room. Mirrors
         ``CacheManager.load_from_disk``: the blocks re-enter the fast tier
         as loads, flipping their peer groups complete again."""
         for node in nodes:
             self.host_index.discard(node.block_id)
+            self.disk_index.discard(node.block_id)
         self._make_room(sum(n.nbytes for n in nodes), exclude=exclude)
-        host_rows = [n.host_payload for n in nodes]
         dev_rows = [self.device_pool.alloc() for _ in nodes]
-        self.device_pool.write_rows(dev_rows,
-                                    self.host_pool.read_rows(host_rows))
+        for pool, spec, srcs in (
+                (self.host_pool, self.quant,
+                 [(n, d) for n, d in zip(nodes, dev_rows)
+                  if n.host_payload is not None]),
+                (self.disk_pool, self.disk_quant,
+                 [(n, d) for n, d in zip(nodes, dev_rows)
+                  if n.disk_payload is not None])):
+            if not srcs:
+                continue
+            src_rows = [n.host_payload if pool is self.host_pool
+                        else n.disk_payload for n, _ in srcs]
+            dst_rows = [d for _, d in srcs]
+            out = pool.read_rows(src_rows)
+            if spec is None:
+                self.device_pool.write_rows(dst_rows, out)
+            else:
+                blocks, scales = out
+                self.device_pool.write_rows(dst_rows, blocks, scales)
+                self.metrics_obj.dequantized_promotions += len(src_rows)
+            self.metrics_obj.promotion_dispatches += 1
         for node, dev in zip(nodes, dev_rows):
-            self.host_pool.free(node.host_payload)
-            node.host_payload = None
+            if node.host_payload is not None:
+                self.host_pool.free(node.host_payload)
+                node.host_payload = None
+                self.host_used -= self._host_nbytes(node)
+                self.host_policy.on_remove(node.block_id)
+            else:
+                self.disk_pool.free(node.disk_payload)
+                node.disk_payload = None
+                self.disk_used -= self.disk_pool.block_nbytes
+                self.disk_policy.on_remove(node.block_id)
+                self.metrics_obj.disk_promotions += 1
             node.payload = dev
             node.resident = True
-            self.host_used -= node.nbytes
             self.used += node.nbytes
-            self.host_policy.on_remove(node.block_id)
             self.metrics_obj.promotions += 1
             self.state.on_loaded(node.block_id)   # flips groups complete
             self.index.add(node.block_id)
@@ -270,4 +483,7 @@ class TieredKVStore(PrefixStore):
         m = super().metrics()
         m["host_used_bytes"] = self.host_used
         m["host_capacity_bytes"] = self.host_capacity
+        if self.disk_tiered or self.disk_capacity > 0:
+            m["disk_used_bytes"] = self.disk_used
+            m["disk_capacity_bytes"] = self.disk_capacity
         return m

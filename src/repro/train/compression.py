@@ -13,25 +13,28 @@ each quantization is carried and added to the next step's gradient, so the
 analytically (EXPERIMENTS.md §Perf): XLA SPMD emits the all-reduce from
 shardings, so the wire format itself is not re-implemented here; the
 fidelity-relevant part (what the update sees) is.
+
+The quantization math lives in the shared ``repro.quant`` (the serve tier
+demotes KV blocks through the same kernels), so train and serve report
+byte ratios from one formula.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from .. import quant
+
 
 def _quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Per-tensor symmetric int8. Returns (q, scale)."""
-    amax = jnp.max(jnp.abs(x))
-    scale = jnp.maximum(amax, 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    return quant.quantize_tensor(x, quant.INT8)
 
 
 def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+    return quant.dequantize_tensor(q, scale)
 
 
 def ef_init(params) -> Any:
@@ -60,6 +63,19 @@ def compress_grads(grads, ef_state):
     return wire, new_ef
 
 
-def compression_ratio(dtype=jnp.float32) -> float:
-    """Wire-byte ratio vs the uncompressed gradient dtype."""
-    return jnp.dtype(dtype).itemsize / 1  # int8 = 1 byte
+def compression_ratio(dtype=jnp.float32, numel: Optional[int] = None,
+                      spec: quant.QuantSpec = quant.INT8) -> float:
+    """Wire-byte ratio vs the uncompressed gradient dtype.
+
+    With ``numel`` the ratio is exact for one tensor of that size: it
+    charges the f32 scale that rides with every quantized tensor (a
+    64-element bf16 tensor compresses 128/(64+4) ≈ 1.88x, not 2x).
+    Without ``numel`` it is the asymptotic per-element ratio (scale
+    overhead amortized to zero) — what the roofline's collective term
+    wants. Either way the source dtype's real width is priced: bf16
+    gradients compress 2x into int8, not the 4x the old f32-only formula
+    claimed.
+    """
+    if numel is None:
+        return jnp.dtype(dtype).itemsize / spec.itemsize
+    return quant.compression_ratio(numel, dtype, spec, n_scales=1)

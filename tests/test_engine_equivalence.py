@@ -447,6 +447,51 @@ def test_tp_engines_token_identical(tp_model, policy, tiered):
         assert m["device_kv_bytes"] * tp == m["kv_bytes_global"]
 
 
+def test_tp_disk_quant_promotion_token_identical(tp_model):
+    """PR 8 under TP: an int8 host tier plus a disk rung behaves
+    identically across mesh widths. The quantize amax reduction over the
+    sharded KV axis is an exact max all-reduce, so every replica computes
+    the same scales — tp=2 must generate token-for-token what tp=1 does,
+    with bit-identical eviction/demotion streams and disk traffic."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >=2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    cfg, params = tp_model
+    reqs = workload(cfg.vocab, n_requests=12, n_families=3, seed=5)
+
+    def run(tp):
+        probe = ServeEngine(cfg, params, max_slots=2, max_seq=64,
+                            store=PrefixStore(1 << 30, "lerc",
+                                              block_tokens=BT),
+                            pool_blocks=1, paged=True)
+        blk = probe._block_nbytes()
+        st = TieredKVStore(blk * 6, "lerc", block_tokens=BT,
+                           host_capacity_bytes=blk * 2,
+                           kv_quant="int8",
+                           disk_capacity_bytes=blk * 64)
+        eng = ServeEngine(cfg, params, max_slots=2, max_seq=64, store=st,
+                          prefill_chunk=8, paged=True,
+                          kv_shard=serve_tp_context(tp))
+        rs = [eng.submit(r, max_new=MAX_NEW) for r in reqs]
+        eng.run()
+        return eng, rs, st
+
+    e1, r1, s1 = run(1)
+    m1 = e1.metrics()
+    assert m1["quantized_demotions"] > 0, "nothing was transcoded"
+    assert m1["disk_promotions"] > 0, "no chain came back from disk"
+    e2, r2, s2 = run(2)
+    assert [r.generated for r in r2] == [r.generated for r in r1]
+    assert s2.eviction_log == s1.eviction_log
+    assert s2.host_eviction_log == s1.host_eviction_log
+    assert s2.disk_eviction_log == s1.disk_eviction_log
+    m2 = e2.metrics()
+    for k in ("demotions", "promotions", "disk_demotions",
+              "disk_promotions", "quantized_demotions",
+              "dequantized_promotions", "tier2_hits"):
+        assert m2[k] == m1[k], k
+
+
 def test_tp_rejects_gather_plane_and_indivisible_heads(tp_model):
     """TP is paged-plane only and must refuse KV-head counts the mesh
     cannot split — loud errors, not silent wrong sharding."""

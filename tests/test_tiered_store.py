@@ -1,11 +1,16 @@
-"""Tiered KV store (PR 4): tier equivalence and promotion semantics.
+"""Tiered KV store (PR 4 + PR 8): tier equivalence, promotion semantics,
+and the transcoding ladder.
 
-Three contracts: (1) with the host tier disabled the tiered store is
-op-for-op the single-tier engine — same tokens, same eviction log;
-(2) a re-referenced evicted prefix is served by *promotion* — zero
-prefill recompute dispatches for the demoted blocks — and promoted
-chains generate token-identically to recomputed ones; (3) a sharded
-frontend with tiered shards matches the single tiered engine."""
+Contracts: (1) with the host tier disabled the tiered store is op-for-op
+the single-tier engine — same tokens, same eviction log; (2) a
+re-referenced evicted prefix is served by *promotion* — zero prefill
+recompute dispatches for the demoted blocks — and promoted chains
+generate token-identically to recomputed ones; (3) a sharded frontend
+with tiered shards matches the single tiered engine; (4) ``kv_quant=
+"none"`` is the lossless identity (tokens, logs, full metrics dict);
+(5) int8 demotion stays inside a measured token-divergence budget;
+(6) blocks that fell two rungs to the lossless disk tier still generate
+exactly."""
 import jax
 import numpy as np
 import pytest
@@ -159,3 +164,106 @@ def test_tiered_sharded_matches_single(model):
                 single.store.host_eviction_log
             assert [r.prefill_skipped for r in freqs] == \
                 [r.prefill_skipped for r in sreqs]
+
+
+def test_kv_quant_none_is_bit_identical(model):
+    """The transcoding machinery set to lossless ("none", the default CLI
+    value) takes the exact pre-quant paths: tokens, both eviction logs,
+    and the FULL metrics dict match a default-constructed tiered store.
+    Guards the contract that quantization is strictly opt-in."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    blk = _block_bytes(cfg, params)
+    cap, host_cap = blk * 8, blk * 10
+
+    base = _engine(cfg, params,
+                   TieredKVStore(cap, "lerc", block_tokens=BT,
+                                 host_capacity_bytes=host_cap))
+    loss = _engine(cfg, params,
+                   TieredKVStore(cap, "lerc", block_tokens=BT,
+                                 host_capacity_bytes=host_cap,
+                                 kv_quant="none"))
+    breqs = _serve(base, reqs)
+    lreqs = _serve(loss, reqs)
+
+    assert base.store.metrics_obj.demotions > 0, "no tier traffic"
+    assert base.store.metrics_obj.promotions > 0
+    assert [r.generated for r in lreqs] == [r.generated for r in breqs]
+    assert loss.store.eviction_log == base.store.eviction_log
+    assert loss.store.host_eviction_log == base.store.host_eviction_log
+    assert loss.metrics() == base.metrics()
+    assert loss.metrics()["quantized_demotions"] == 0
+    assert "kv_quant" not in loss.metrics()   # quant keys stay opt-in too
+
+
+def test_int8_promotion_within_divergence_budget(model):
+    """Quantized demotion is lossy by design; the gate is a *measured*
+    token-quality budget, not bit-identity: across re-referenced
+    requests, mean leading-token agreement with the lossless engine
+    stays >= 0.5 (observed ~0.9 at this scale), while the transcode
+    path is demonstrably exercised."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    blk = _block_bytes(cfg, params)
+    cap, host_cap = blk * 8, blk * 10
+
+    def run(kv_quant):
+        eng = _engine(cfg, params,
+                      TieredKVStore(cap, "lerc", block_tokens=BT,
+                                    host_capacity_bytes=host_cap,
+                                    kv_quant=kv_quant))
+        return eng, _serve(eng, reqs)
+
+    lossless, lreqs = run(None)
+    quantized, qreqs = run("int8")
+    m = quantized.metrics()
+    assert m["quantized_demotions"] > 0, "nothing was transcoded"
+    assert m["dequantized_promotions"] > 0, "no quantized chain promoted"
+    assert m["host_compression_ratio"] > 1.5
+
+    def agree(a, b):
+        n = 0
+        for x, y in zip(a, b):
+            if x != y:
+                break
+            n += 1
+        return n / max(len(a), 1)
+
+    scores = [agree(q.generated, l.generated)
+              for q, l in zip(qreqs, lreqs)]
+    assert sum(scores) / len(scores) >= 0.5, scores
+
+
+def test_disk_tier_promotion_is_lossless_and_disk_evicts(model):
+    """Blocks that fell two rungs (device -> host -> memmap file) promote
+    straight back to the device pool and generate exactly the big-cache
+    tokens; an undersized disk rung exercises the third eviction index
+    (disk_evictions + skeleton GC) without breaking the engine."""
+    cfg, params = model
+    reqs = workload(cfg.vocab)
+    blk = _block_bytes(cfg, params)
+
+    big = _engine(cfg, params,
+                  PrefixStore(1 << 30, "lerc", block_tokens=BT))
+    breqs = _serve(big, reqs)
+
+    disk = _engine(cfg, params,
+                   TieredKVStore(blk * 8, "lerc", block_tokens=BT,
+                                 host_capacity_bytes=blk * 3,
+                                 disk_capacity_bytes=blk * 64))
+    dreqs = _serve(disk, reqs)
+    m = disk.metrics()
+    assert m["disk_demotions"] > 0, "host pressure never reached disk"
+    assert m["disk_promotions"] > 0, "no chain came back from disk"
+    assert m["tier2_hits"] > 0
+    assert [r.generated for r in dreqs] == [r.generated for r in breqs]
+
+    tiny = _engine(cfg, params,
+                   TieredKVStore(blk * 8, "lerc", block_tokens=BT,
+                                 host_capacity_bytes=blk * 3,
+                                 disk_capacity_bytes=blk * 4))
+    _serve(tiny, reqs)
+    assert tiny.metrics()["disk_evictions"] > 0, \
+        "undersized disk rung produced no final evictions"
+    assert len(tiny.store.disk_eviction_log) == \
+        tiny.metrics()["disk_evictions"]
