@@ -126,6 +126,40 @@ def main(toy: bool = False) -> None:
                  "ttft_p99", "tpot_p50", "tpot_p95", "prefill_saved_frac",
                  "virtual_time", "evictions"])
 
+    # ---- traced-overhead arm (obs PR): the budgeted/lerc configuration
+    # once more, untraced vs traced, on a warm jit cache — the recorder's
+    # cost is pure Python per instrumentation site, so the wall ratio is
+    # the "tracing enabled" overhead headline (target <= 1.05x; reported,
+    # not asserted — CI wall clocks are noisy)
+    import time as _time
+
+    from benchmarks.trace_report import latency_from_trace
+    from repro.obs import TraceRecorder
+
+    t0 = _time.perf_counter()
+    eng_off = make("lerc", BudgetedScheduler(BUDGET))
+    play_trace(eng_off, trace)
+    wall_off = _time.perf_counter() - t0
+
+    recorder = TraceRecorder()
+    eng_on = make("lerc", BudgetedScheduler(BUDGET))
+    eng_on.attach_trace(recorder)
+    t0 = _time.perf_counter()
+    report_on = play_trace(eng_on, trace)
+    wall_on = _time.perf_counter() - t0
+    eng_on.metrics()      # runs the attribution conservation check
+    # the report a human would read from the trace file must say exactly
+    # what the live accounting said (deterministic: virtual clock)
+    recon = latency_from_trace(recorder.export()["traceEvents"])
+    live = latency_stats(report_on)
+    assert recon == live, f"trace-reconstructed stats diverge:\n" \
+                          f"  trace: {recon}\n  live:  {live}"
+    trace_overhead = wall_on / max(wall_off, 1e-9)
+    print(f"\ntracing overhead: {wall_on:.2f}s traced vs {wall_off:.2f}s "
+          f"untraced = {trace_overhead:.3f}x "
+          f"({recorder.n_emitted} events; target <=1.05x); "
+          "trace-reconstructed latency stats match live: OK")
+
     by = {(r["scheduler"], r["policy"]): r for r in rows}
     fcfs, bud = by[("fcfs", "lerc")], by[("budgeted", "lerc")]
     ttft_ratio = fcfs["ttft_p95"] / max(bud["ttft_p95"], 1e-9)
@@ -137,6 +171,8 @@ def main(toy: bool = False) -> None:
         "budgeted_tpot_p95_regress": round(tpot_regress, 2),
         "lerc_goodput": lerc_good,
         "lru_goodput": lru_good,
+        "trace_overhead_x": round(trace_overhead, 3),
+        "trace_events": recorder.n_emitted,
     }
     print(f"\nbudgeted vs fcfs (lerc): {ttft_ratio:.1f}x better p95 TTFT "
           "(target: >=2x), TPOT p95 regress "

@@ -168,10 +168,21 @@ class CacheManager:
         spec = self.state.dag.tasks[task]
         materialized_peers = [b for b in spec.inputs if b in self.state.materialized]
         all_peers_cached = all(b in self.mem for b in materialized_peers)
+        # ineffective-hit attribution: where the first blocking peer sits
+        # (on disk a load would complete the group; absent it must be
+        # recomputed — "evicted" vs "never_cached" is not distinguishable
+        # from MemoryTier/DiskTier membership alone, so absent blocks that
+        # were never spilled attribute to the recompute bucket)
+        cause = None
+        if not all_peers_cached:
+            blocker = next(b for b in materialized_peers if b not in self.mem)
+            cause = "disk" if blocker in self.disk else "never_cached"
         hits: Dict[BlockId, bool] = {}
         for b in materialized_peers:
             hit = b in self.mem
             hits[b] = hit
             self.policy.on_access(b)
-            self.metrics.record_access(hit=hit, effective=hit and all_peers_cached)
+            self.metrics.record_access(hit=hit,
+                                       effective=hit and all_peers_cached,
+                                       cause=cause)
         return hits

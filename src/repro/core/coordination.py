@@ -45,6 +45,7 @@ import pickle
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..obs.trace import TID_BUS as _TID_BUS
 from .dag import BlockId, DagState, JobDAG, TaskId
 from .metrics import MessageStats
 
@@ -57,6 +58,50 @@ def payload_nbytes(payload: tuple) -> int:
     actually serializes; pickle gives an honest, deterministic estimate of
     what an RPC transport would put on the wire."""
     return len(pickle.dumps(payload, protocol=pickle.HIGHEST_PROTOCOL))
+
+
+def _shape_key(payload) -> Optional[tuple]:
+    """Cache key under which two payloads are guaranteed to pickle to the
+    SAME number of bytes — or None when we can't guarantee it (then the
+    caller pickles for real). Covers the hot wire shapes: flat tuples of
+    ≤4 primitives, which is every status/eviction message on the bus.
+
+    The guarantees lean on pickle's fixed-width opcodes at
+    ``HIGHEST_PROTOCOL``: a str costs opcode + length prefix + its UTF-8
+    bytes (prefix width switches on the *byte* length, so key on that);
+    an int costs a fixed frame by magnitude class (BININT1 < 256,
+    BININT2 < 65536, BININT within int32 — wider ints bail); bool/None
+    are single opcodes keyed by value; a float is a fixed 9-byte
+    BINFLOAT. One trap: pickle memoizes by object *identity*, so a
+    repeated string object would shrink to a back-reference — bail on
+    identity-duplicate strings."""
+    if type(payload) is not tuple or len(payload) > 4:
+        return None
+    key: list = [len(payload)]
+    str_ids: set = set()
+    for v in payload:
+        t = type(v)
+        if t is str:
+            if id(v) in str_ids:
+                return None
+            str_ids.add(id(v))
+            key.append(("s", len(v.encode("utf-8"))))
+        elif t is bool or v is None:
+            key.append(("c", v))
+        elif t is int:
+            if 0 <= v < 256:
+                key.append(("i", 1))
+            elif 0 <= v < 65536:
+                key.append(("i", 2))
+            elif -2 ** 31 <= v < 2 ** 31:
+                key.append(("i", 4))
+            else:
+                return None
+        elif t is float:
+            key.append(("f",))
+        else:
+            return None
+    return tuple(key)
 
 
 @dataclass
@@ -75,26 +120,66 @@ class MessageBus:
     deployment would replace this with RPC endpoints; the protocol logic
     above it is identical. ``record_log`` keeps the full message log for
     tests; long-running embedders (the simulator, the serve frontend) turn
-    it off so memory stays bounded."""
+    it off so memory stays bounded.
 
-    def __init__(self, record_log: bool = True) -> None:
+    ``stats_level`` gates how much accounting each send pays:
+
+    * ``"full"`` (default) — message counts AND serialized payload bytes.
+      Sizing pickles the payload, but repeated wire shapes (flat tuples of
+      ≤4 primitives — every status/eviction message) hit a shape-keyed
+      size cache, so the steady state is a dict lookup, not a pickle. The
+      cache is exact: ``tests/test_obs.py`` asserts byte counters are
+      unchanged vs. sizing every payload from scratch.
+    * ``"counts"`` — skip payload sizing entirely; the byte counters stay
+      zero, the count counters are identical to ``"full"``.
+    """
+
+    def __init__(self, record_log: bool = True,
+                 stats_level: str = "full") -> None:
+        if stats_level not in ("full", "counts"):
+            raise ValueError(f"stats_level must be full|counts, "
+                             f"got {stats_level!r}")
         self.stats = MessageStats()
         self.record_log = record_log
+        self.stats_level = stats_level
         self.log: List[Message] = []
         self._endpoints: Dict[str, Callable[[Message], None]] = {}
+        self._size_cache: Dict[tuple, int] = {}
+        # obs: an attached ``repro.obs.TraceRecorder`` (None = off)
+        self.trace = None
+        self.trace_pid = 0
 
     def register(self, name: str, handler: Callable[[Message], None]) -> None:
         self._endpoints[name] = handler
 
+    def payload_nbytes(self, payload: tuple) -> int:
+        """Wire size of ``payload`` under this bus's stats level: 0 at
+        ``"counts"``; at ``"full"`` the exact pickled size, via the shape
+        cache when the payload's shape guarantees a fixed size."""
+        if self.stats_level == "counts":
+            return 0
+        key = _shape_key(payload)
+        if key is None:
+            return payload_nbytes(payload)
+        n = self._size_cache.get(key)
+        if n is None:
+            n = payload_nbytes(payload)
+            self._size_cache[key] = n
+        return n
+
     def send(self, msg: Message) -> None:
         if msg.nbytes is None:
-            msg.nbytes = payload_nbytes(msg.payload)
+            msg.nbytes = self.payload_nbytes(msg.payload)
         if self.record_log:
             self.log.append(msg)
         self.stats.point_to_point += 1
         self.stats.payload_bytes += msg.nbytes
         if msg.kind in LERC_KINDS:
             self.stats.lerc_bytes += msg.nbytes
+        if self.trace is not None:
+            self.trace.instant(
+                "bus." + msg.kind, "bus", self.trace_pid, _TID_BUS,
+                args={"src": msg.src, "dst": msg.dst, "bytes": msg.nbytes})
         self._endpoints[msg.dst](msg)
 
 
@@ -269,15 +354,16 @@ class PeerTrackerMaster:
         self._broadcast("status", (event, block_or_task))
 
     def _broadcast(self, kind: str, payload: tuple) -> None:
-        nbytes = payload_nbytes(payload)
+        nbytes = self.bus.payload_nbytes(payload)
         for w in range(self.n_workers):
             self.bus.send(Message(kind, payload, src="master",
                                   dst=f"worker:{w}", nbytes=nbytes))
 
 
-def build_cluster(n_workers: int, record_log: bool = True
+def build_cluster(n_workers: int, record_log: bool = True,
+                  stats_level: str = "full"
                   ) -> Tuple[PeerTrackerMaster, List[PeerTracker], MessageBus]:
-    bus = MessageBus(record_log=record_log)
+    bus = MessageBus(record_log=record_log, stats_level=stats_level)
     workers = [PeerTracker(w, bus) for w in range(n_workers)]
     master = PeerTrackerMaster(bus, n_workers)
     return master, workers, bus

@@ -3,11 +3,56 @@
 The paper's point (§III-A, Figs. 6–7): the *effective* cache hit ratio —
 hits whose whole peer group is resident — predicts job runtime; the plain
 hit ratio does not.
+
+``merge``/``as_dict`` are derived from ``dataclasses.fields`` so a
+counter added by a future PR is aggregated and reported automatically —
+the hand-maintained three-place copies these replaced silently dropped
+any field someone forgot (``tests/test_obs.py`` round-trips every field
+through both).
+
+Effective-hit **attribution** (the obs PR): every ineffective hit
+increments exactly one bucket of ``ineffective_by_cause`` — where the
+first blocking peer block of its group/chain was sitting at access time:
+
+* ``"host"`` / ``"disk"`` — demoted to a slower tier (a promotion copy,
+  not a recompute, would complete the group);
+* ``"evicted"`` — was resident once and died (the policy's fault);
+* ``"never_cached"`` — never entered the cache at all (cold chain);
+* ``"unattributed"`` — the caller recorded no cause.
+
+Conservation holds structurally: ``sum(ineffective_by_cause.values())
+== hits - effective_hits`` after any interleaving of ``record_access``
+and ``merge`` (``check_attribution`` asserts it; the stores and the sim
+call it on every metrics read).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict
+from dataclasses import dataclass, field, fields
+from typing import Dict, Optional
+
+
+def _merged(a, b):
+    """Field-derived dataclass merge: numeric fields sum, dict-valued
+    counter fields sum key-wise."""
+    kw = {}
+    for f in fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, dict):
+            out = dict(va)
+            for k, v in vb.items():
+                out[k] = out.get(k, 0) + v
+            kw[f.name] = out
+        else:
+            kw[f.name] = va + vb
+    return type(a)(**kw)
+
+
+def _field_dict(obj) -> Dict[str, object]:
+    """Every dataclass field, in declaration order; dict-valued fields
+    are copied so callers can't mutate the live counters."""
+    return {f.name: (dict(v) if isinstance(v, dict) else v)
+            for f in fields(obj)
+            for v in (getattr(obj, f.name),)}
 
 
 @dataclass
@@ -37,9 +82,12 @@ class CacheMetrics:
     dequantized_promotions: int = 0  # promotions that widened it back
     promotion_dispatches: int = 0    # batched transfers (1 per tier per
     #                                  promotion, however many blocks ride)
+    # ---- effective-hit attribution (obs PR): ineffective hits bucketed
+    # by where the first blocking peer block sat at access time ----
+    ineffective_by_cause: Dict[str, int] = field(default_factory=dict)
 
-    def record_access(self, hit: bool, effective: bool,
-                      tier: int = 0) -> None:
+    def record_access(self, hit: bool, effective: bool, tier: int = 0,
+                      cause: Optional[str] = None) -> None:
         self.accesses += 1
         if hit:
             self.hits += 1
@@ -53,6 +101,12 @@ class CacheMetrics:
             if tier != 0:
                 raise ValueError("an effective hit must be a fast-tier hit")
             self.effective_hits += 1
+        elif hit:
+            # every ineffective hit lands in exactly one bucket, so the
+            # conservation invariant cannot drift no matter the caller
+            c = cause or "unattributed"
+            self.ineffective_by_cause[c] = \
+                self.ineffective_by_cause.get(c, 0) + 1
 
     @property
     def hit_ratio(self) -> float:
@@ -62,52 +116,22 @@ class CacheMetrics:
     def effective_hit_ratio(self) -> float:
         return self.effective_hits / self.accesses if self.accesses else 0.0
 
+    def check_attribution(self) -> None:
+        got = sum(self.ineffective_by_cause.values())
+        want = self.hits - self.effective_hits
+        if got != want:
+            raise AssertionError(
+                f"ineffective-hit attribution leaked: "
+                f"sum(causes)={got} != hits-effective={want} "
+                f"({self.ineffective_by_cause})")
+
     def merge(self, other: "CacheMetrics") -> "CacheMetrics":
-        return CacheMetrics(
-            accesses=self.accesses + other.accesses,
-            hits=self.hits + other.hits,
-            effective_hits=self.effective_hits + other.effective_hits,
-            evictions=self.evictions + other.evictions,
-            disk_bytes_read=self.disk_bytes_read + other.disk_bytes_read,
-            mem_bytes_read=self.mem_bytes_read + other.mem_bytes_read,
-            tier1_hits=self.tier1_hits + other.tier1_hits,
-            tier2_hits=self.tier2_hits + other.tier2_hits,
-            demotions=self.demotions + other.demotions,
-            promotions=self.promotions + other.promotions,
-            host_evictions=self.host_evictions + other.host_evictions,
-            disk_demotions=self.disk_demotions + other.disk_demotions,
-            disk_promotions=self.disk_promotions + other.disk_promotions,
-            disk_evictions=self.disk_evictions + other.disk_evictions,
-            quantized_demotions=(self.quantized_demotions
-                                 + other.quantized_demotions),
-            dequantized_promotions=(self.dequantized_promotions
-                                    + other.dequantized_promotions),
-            promotion_dispatches=(self.promotion_dispatches
-                                  + other.promotion_dispatches),
-        )
+        return _merged(self, other)
 
     def as_dict(self) -> Dict[str, float]:
-        return {
-            "accesses": self.accesses,
-            "hits": self.hits,
-            "effective_hits": self.effective_hits,
-            "evictions": self.evictions,
-            "hit_ratio": self.hit_ratio,
-            "effective_hit_ratio": self.effective_hit_ratio,
-            "disk_bytes_read": self.disk_bytes_read,
-            "mem_bytes_read": self.mem_bytes_read,
-            "tier1_hits": self.tier1_hits,
-            "tier2_hits": self.tier2_hits,
-            "demotions": self.demotions,
-            "promotions": self.promotions,
-            "host_evictions": self.host_evictions,
-            "disk_demotions": self.disk_demotions,
-            "disk_promotions": self.disk_promotions,
-            "disk_evictions": self.disk_evictions,
-            "quantized_demotions": self.quantized_demotions,
-            "dequantized_promotions": self.dequantized_promotions,
-            "promotion_dispatches": self.promotion_dispatches,
-        }
+        return {**_field_dict(self),
+                "hit_ratio": self.hit_ratio,
+                "effective_hit_ratio": self.effective_hit_ratio}
 
 
 @dataclass
@@ -120,7 +144,8 @@ class MessageStats:
     (Spark's BlockManagerMaster updates). ``point_to_point`` counts every
     individual message on the wire across both channels; the byte counters
     measure serialized payload sizes so overhead is reportable in bytes as
-    well as message counts.
+    well as message counts (zeros on a bus running at stats level
+    ``"counts"``, which skips payload sizing entirely).
     """
 
     peer_profile_broadcasts: int = 0      # job submit: peer info -> workers
@@ -130,12 +155,8 @@ class MessageStats:
     payload_bytes: int = 0                # serialized payload bytes, all msgs
     lerc_bytes: int = 0                   # ...restricted to the LERC channel
 
+    def merge(self, other: "MessageStats") -> "MessageStats":
+        return _merged(self, other)
+
     def as_dict(self) -> Dict[str, int]:
-        return {
-            "peer_profile_broadcasts": self.peer_profile_broadcasts,
-            "eviction_reports": self.eviction_reports,
-            "eviction_broadcasts": self.eviction_broadcasts,
-            "point_to_point": self.point_to_point,
-            "payload_bytes": self.payload_bytes,
-            "lerc_bytes": self.lerc_bytes,
-        }
+        return _field_dict(self)

@@ -17,6 +17,7 @@ goodput-under-deadline on the deterministic virtual clock:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -26,6 +27,7 @@ import numpy as np
 from .. import configs
 from ..core import POLICIES
 from ..models import init_params, model_spec
+from ..obs import TraceRecorder, jsonable
 from ..serve import (BudgetedScheduler, PrefixStore, ServeEngine,
                      ShardedFrontend, TieredKVStore, TracedRequest,
                      latency_stats, play_trace)
@@ -119,6 +121,17 @@ def serve_main(argv=None) -> int:
                     help="admission-control queue bound (per shard); "
                          "arrivals past it are shed with QueueFull")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome/Perfetto trace of the whole run "
+                         "(engine step phases, scheduler decisions, "
+                         "request lifecycles, store tier moves, bus "
+                         "messages) and write trace-event JSON here; "
+                         "render reports with benchmarks/trace_report.py")
+    ap.add_argument("--trace-limit", type=int, default=200_000,
+                    help="trace ring-buffer size in events (oldest drop)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="dump the final metrics dict (plus the run args) "
+                         "as JSON")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch, smoke=args.smoke)
@@ -179,6 +192,11 @@ def serve_main(argv=None) -> int:
                           scheduler=scheduler, max_queue=args.max_queue,
                           tp=args.tp)
 
+    recorder = None
+    if args.trace is not None:
+        recorder = TraceRecorder(limit=args.trace_limit)
+        eng.attach_trace(recorder)
+
     if host_bytes > 0:
         # a host budget below one KV block (per shard) sizes the pool to
         # zero rows, silently disabling the tier — say so up front
@@ -228,6 +246,16 @@ def serve_main(argv=None) -> int:
     for k, v in m.items():
         print(f"  {k:26s} {v:.3f}" if isinstance(v, float)
               else f"  {k:26s} {v}")
+    if recorder is not None:
+        recorder.export(args.trace)
+        print(f"trace: {args.trace}  events={len(recorder.events)}"
+              f"  emitted={recorder.n_emitted}"
+              f"  dropped={recorder.n_dropped}")
+    if args.metrics_json is not None:
+        with open(args.metrics_json, "w") as f:
+            json.dump(jsonable({"args": vars(args), "metrics": m}),
+                      f, indent=2)
+        print(f"metrics: {args.metrics_json}")
     return 0
 
 

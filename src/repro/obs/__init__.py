@@ -1,0 +1,13 @@
+"""repro.obs — zero-overhead-when-off tracing/telemetry for the serve
+and sim stacks. ``TraceRecorder`` is a bounded ring buffer of spans,
+instants, counter samples and per-request async lifecycle events,
+stamped with both the embedder's deterministic virtual clock and the
+wall clock, exporting Chrome/Perfetto trace-event JSON. Wire it in with
+``ServeEngine.attach_trace`` / ``ShardedFrontend.attach_trace`` /
+``ClusterSim(trace=...)`` or ``repro.launch.serve --trace out.json``;
+``benchmarks/trace_report.py`` renders reports from the export."""
+from .trace import (TID_BUS, TID_ENGINE, TID_REQ, TID_SCHED, TID_STORE,
+                    Span, TraceRecorder, jsonable)
+
+__all__ = ["TraceRecorder", "Span", "jsonable", "TID_ENGINE", "TID_SCHED",
+           "TID_STORE", "TID_REQ", "TID_BUS"]

@@ -55,6 +55,8 @@ import numpy as np
 
 from ..models import decode_step, init_decode_cache
 from ..models.common import ModelConfig
+from ..obs.trace import (TID_ENGINE as _TID_ENGINE, TID_REQ as _TID_REQ,
+                         TID_SCHED as _TID_SCHED, TID_STORE as _TID_STORE)
 from ..sharding import KVShardCtx, serve_tp_context
 from .disk_pool import DiskBlockPool
 from .host_pool import HostBlockPool
@@ -301,6 +303,47 @@ class ServeEngine:
         self.readback_syncs = 0         # device→host blocking reads
         self.rejected = 0               # backpressure sheds
         self.cancellations = 0
+        # obs: an attached ``repro.obs.TraceRecorder`` (None = every
+        # instrumentation site is one predicate — bit-identical behavior,
+        # see tests/test_obs.py)
+        self.trace = None
+        self._trace_pid = 0
+
+    # ------------------------------------------------------------------ obs
+    def attach_trace(self, recorder, pid: int = 0,
+                     name: str = "engine") -> None:
+        """Wire a ``TraceRecorder`` through every layer of this engine:
+        step phases + scheduler decisions + request lifecycle (this
+        class), and store events (the prefix store). ``pid`` namespaces
+        the events when several engines (sharded frontend) share one
+        recorder."""
+        self.trace = recorder
+        self._trace_pid = pid
+        for tid in (_TID_ENGINE, _TID_SCHED, _TID_STORE, _TID_REQ):
+            recorder.label(pid, name, tid=tid)
+        self.store.trace = recorder
+        self.store.trace_pid = pid
+        recorder.vt = self.now
+
+    def _aid(self, req: "Request") -> str:
+        """Async-track id for a request: pid-qualified, because rids are
+        per-engine counters that collide across shards."""
+        return f"{self._trace_pid}:{req.rid}"
+
+    def _trace_req_end(self, r: "Request") -> None:
+        """Close a request's lifecycle track with everything
+        ``latency_stats`` needs, so reports reconstruct TTFT/TPOT
+        percentiles from the trace alone."""
+        if self.trace is None:
+            return
+        self.trace.end_async(
+            "req", self._aid(r), "request", self._trace_pid, _TID_REQ,
+            args={"rid": r.rid, "arrival": r.arrival, "deadline": r.deadline,
+                  "first_token_at": r.first_token_at,
+                  "finished_at": r.finished_at,
+                  "n_generated": len(r.generated),
+                  "cancelled": r.cancelled,
+                  "prefill_skipped": r.prefill_skipped})
 
     # ------------------------------------------------------------- requests
     def submit(self, prompt: Sequence[int], max_new: int = 16, *,
@@ -313,12 +356,22 @@ class ServeEngine:
         admission control is on and the queue is at ``max_queue``."""
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.rejected += 1
+            if self.trace is not None:
+                self.trace.instant(
+                    "rejected", "request", self._trace_pid, _TID_REQ,
+                    args={"queued": len(self.queue)})
             raise QueueFull(f"queue at max_queue={self.max_queue}")
         req = Request(next(self._rid), list(prompt), max_new,
                       arrival=self.now if arrival is None else arrival,
                       deadline=deadline)
         req.prefix_rid = self.store.register_request(prompt)
         self.queue.append(req)
+        if self.trace is not None:
+            self.trace.begin_async(
+                "req", self._aid(req), "request", self._trace_pid, _TID_REQ,
+                args={"rid": req.rid, "prompt_tokens": len(req.prompt),
+                      "max_new": req.max_new, "deadline": req.deadline},
+                vt=req.arrival)
         return req
 
     def cancel(self, req: Request) -> bool:
@@ -344,6 +397,7 @@ class ServeEngine:
         self.store.complete_request(req.prefix_rid)
         self._drain(req)
         req.finished_at = self.now
+        self._trace_req_end(req)
         return True
 
     def drain(self, req: Request) -> List[int]:
@@ -399,6 +453,7 @@ class ServeEngine:
             if self.slots[i] is not None or not self.queue:
                 continue
             pick = self.scheduler.admit_idx(self.queue)
+            queued = len(self.queue)
             if pick == 0:
                 req = self.queue.popleft()
             else:
@@ -442,6 +497,15 @@ class ServeEngine:
             req.prefill_skipped = restored
             self.prefill_tokens_skipped += restored
             self.slots[i] = req
+            if self.trace is not None:
+                self.trace.instant(
+                    "sched.admit", "sched", self._trace_pid, _TID_SCHED,
+                    args={"rid": req.rid, "slot": i, "pick": pick,
+                          "queued": queued, "restored_tokens": restored})
+                self.trace.async_instant(
+                    "req", self._aid(req), "request", self._trace_pid,
+                    _TID_REQ, args={"event": "admitted", "slot": i,
+                                    "restored_tokens": restored})
 
     # ----------------------------------------------------------------- step
     def step(self) -> List[Request]:
@@ -451,7 +515,21 @@ class ServeEngine:
         deadline-ordered token budget under the budgeted scheduler (slots
         it preempts idle for the step) — all in a single batched dispatch.
         Returns requests that finished."""
-        self._admit()
+        trace = self.trace
+        if trace is None:
+            return self._step_inner(None)
+        trace.vt = self.now
+        with trace.span("step", "engine", self._trace_pid, _TID_ENGINE,
+                        args={"n": self.steps}):
+            return self._step_inner(trace)
+
+    def _step_inner(self, trace) -> List[Request]:
+        pid = self._trace_pid
+        if trace is None:
+            self._admit()
+        else:
+            with trace.span("admit", "engine", pid, _TID_ENGINE):
+                self._admit()
         active = [r for r in self.slots if r is not None]
         if not active:
             return []
@@ -467,6 +545,16 @@ class ServeEngine:
             r = prefilling[0]
             plan = {r.slot: min(self.prefill_chunk,
                                 len(r.prompt) - r.pos)}
+        if trace is not None:
+            trace.instant(
+                "sched.plan", "sched", pid, _TID_SCHED,
+                args={"plan": {str(s): n for s, n in plan.items()},
+                      "preempted": [r.rid for r in prefilling
+                                    if r.slot not in plan],
+                      "decoding": len(decoding)})
+        dispatch = (trace.span("dispatch", "engine", pid,
+                               _TID_ENGINE).begin()
+                    if trace is not None else None)
         feeds: Dict[int, List[int]] = {}
         use_prev = np.zeros((self.B,), bool)
         for r in decoding:
@@ -527,6 +615,9 @@ class ServeEngine:
         else:
             self.cache = new_kv
         self._prev_out = out_tok
+        if dispatch is not None:
+            dispatch.end(args={"S": S, "fed": len(fed),
+                               "decoding": len(decoding)})
         self.steps += 1
         # prefill attention reads this step: a prompt chunk of ``lens``
         # tokens attends over a context ending at pos + lens, so late
@@ -536,6 +627,13 @@ class ServeEngine:
         attn_pairs = int((meta[1] * (meta[0] + meta[1]) * pre).sum())
         self.now += float(self.clock(int(meta[1].sum()) - len(decoding),
                                      len(decoding), attn_pairs))
+        if trace is not None:
+            trace.vt = self.now
+            trace.counter("engine", pid, {
+                "queue": len(self.queue),
+                "active_slots": sum(s is not None for s in self.slots),
+                "pool_blocks_in_use": self.pool.blocks_in_use,
+                "store_used_bytes": self.store.used})
 
         finished: List[Request] = []
         for r in fed:
@@ -546,6 +644,10 @@ class ServeEngine:
                 r._lazy_out.append(out_tok)
                 if r.n_generated == 1:
                     r.first_token_at = self.now
+                    if trace is not None:
+                        trace.async_instant(
+                            "req", self._aid(r), "request", pid, _TID_REQ,
+                            args={"event": "first_token"})
             if r.pos == len(r.prompt):
                 self._publish(r)
             if in_decode and r.n_generated >= r.max_new:
@@ -557,7 +659,11 @@ class ServeEngine:
             # instead of the whole token vector every step. A slot that
             # hit EOS between checks decoded a few garbage tokens past it
             # — _finish truncates them — in exchange for pipelined steps.
-            done = np.asarray(jax.device_get(self._done_dev))
+            if trace is None:
+                done = np.asarray(jax.device_get(self._done_dev))
+            else:
+                with trace.span("eos_sync", "engine", pid, _TID_ENGINE):
+                    done = np.asarray(jax.device_get(self._done_dev))
             self.readback_syncs += 1
             for r in decoding:
                 if not r.done and done[r.slot]:
@@ -576,6 +682,7 @@ class ServeEngine:
         r.finished_at = self.now
         self.store.complete_request(r.prefix_rid)
         self._release_slot(r)
+        self._trace_req_end(r)
 
     def _release_slot(self, r: Request) -> None:
         """Free a slot's engine-side resources *now* (finish or cancel):
@@ -594,7 +701,14 @@ class ServeEngine:
         blocking device_get for all of them — by finish time the pipeline
         has usually already computed every step)."""
         if r._lazy_out:
-            vals = jax.device_get(r._lazy_out)
+            if self.trace is None:
+                vals = jax.device_get(r._lazy_out)
+            else:
+                with self.trace.span("readback", "engine", self._trace_pid,
+                                     _TID_ENGINE,
+                                     args={"steps": len(r._lazy_out),
+                                           "rid": r.rid}):
+                    vals = jax.device_get(r._lazy_out)
             r.generated.extend(int(v[r.slot]) for v in vals)
             r._lazy_out = []
             self.readback_syncs += 1

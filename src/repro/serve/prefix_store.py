@@ -56,6 +56,7 @@ from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
 
 from ..core import (BlockMeta, CacheMetrics, DagState, EvictionIndex,
                     JobDAG, Policy, TaskSpec, make_policy)
+from ..obs.trace import TID_STORE as _TID_STORE
 
 TokenBlock = Tuple[int, ...]
 
@@ -72,12 +73,27 @@ class Node:
     # holds at most one tier.
     host_payload: Any = None
     disk_payload: Any = None
+    # has this node EVER held a fast-tier payload? Distinguishes an
+    # "evicted" gap (the policy killed it) from a "never_cached" one
+    # (cold chain) when attributing ineffective hits.
+    ever_resident: bool = False
     children: Dict[TokenBlock, "Node"] = field(default_factory=dict)
     uid: int = 0
 
     @property
     def block_id(self) -> str:
         return f"n{self.uid}"
+
+
+def blocking_cause(node: Node) -> str:
+    """Where a non-tier-0 chain node currently sits — the attribution
+    bucket charged to every ineffective hit it blocks (the first such
+    node on a chain is the one the whole suffix waits on)."""
+    if node.host_payload is not None:
+        return "host"
+    if node.disk_payload is not None:
+        return "disk"
+    return "evicted" if node.ever_resident else "never_cached"
 
 
 class PrefixStore:
@@ -96,6 +112,10 @@ class PrefixStore:
         #                                         / "forget_block"
         self.on_evict: Optional[Callable[[str, List[str]], None]] = None
         self.on_status: Optional[Callable[[str, str], None]] = None
+        # obs: an attached ``repro.obs.TraceRecorder`` (None = every
+        # instrumentation site is one predicate — bit-identical behavior)
+        self.trace = None
+        self.trace_pid = 0
         self.root = Node(key=(), parent=None, resident=True)
         self.used = 0
         self._uids = itertools.count(1)
@@ -233,18 +253,34 @@ class PrefixStore:
         usable: List[Node] = []
         touched: List[Node] = []
         broken = False
+        cause = None          # first gap's location: the blocking block
+        blocking = [] if self.trace is not None else None
+        ineff: Dict[str, int] = {}
         for node in chain:
             hit = node.resident
             if not hit:
                 broken = True
+                if cause is None:
+                    cause = blocking_cause(node)
+                if blocking is not None:
+                    blocking.append((node.uid, blocking_cause(node)))
             self.metrics_obj.record_access(hit=hit,
-                                           effective=hit and not broken)
+                                           effective=hit and not broken,
+                                           cause=cause)
             if hit:
                 if not broken:
                     usable.append(node)
+                else:
+                    ineff[cause] = ineff.get(cause, 0) + 1
                 touched.append(node)
         for node in reversed(touched):            # leaf first, root last
             self.policy.on_access(node.block_id)
+        if self.trace is not None:
+            self.trace.instant(
+                "store.lookup", "store", self.trace_pid, _TID_STORE,
+                args={"blocks": len(chain), "usable": len(usable),
+                      "broken": broken, "blocking": blocking,
+                      "ineffective": ineff})
         return usable
 
     # --------------------------------------------------------------- writes
@@ -271,6 +307,7 @@ class PrefixStore:
                             else payloads[i])
             node.nbytes = nbytes_per_block
             node.resident = True
+            node.ever_resident = True
             self.used += nbytes_per_block
             self.state.on_loaded(node.block_id)   # flips prefixes complete
             self.index.add(node.block_id)
@@ -279,6 +316,11 @@ class PrefixStore:
                 self.on_status("loaded", node.block_id)
         for node in reversed(fresh):              # leaf first, root last
             self.policy.on_insert(node.block_id)
+        if self.trace is not None and fresh:
+            self.trace.instant(
+                "store.insert", "store", self.trace_pid, _TID_STORE,
+                args={"blocks": [n.uid for n in fresh],
+                      "nbytes_per_block": nbytes_per_block})
 
     def _pre_insert(self, node: Node) -> None:
         """Hook: ``node`` (non-resident) is about to be (re)inserted.
@@ -297,6 +339,14 @@ class PrefixStore:
             self._evict(self._nodes[victim])
 
     def _evict(self, node: Node) -> None:
+        if self.trace is not None:
+            # the policy's eviction key at decision time, before the state
+            # update invalidates it
+            self.trace.instant(
+                "store.evict", "store", self.trace_pid, _TID_STORE,
+                args={"uid": node.uid, "block": node.block_id, "tier": 0,
+                      "key": str(self.policy.eviction_key(node.block_id,
+                                                          self.state))})
         node.resident = False
         if self.evict_payload is not None and node.payload is not None:
             self.evict_payload(node.payload)
@@ -319,4 +369,5 @@ class PrefixStore:
         return self.metrics_obj.evictions
 
     def metrics(self) -> Dict[str, float]:
+        self.metrics_obj.check_attribution()
         return {**self.metrics_obj.as_dict(), "used_bytes": self.used}

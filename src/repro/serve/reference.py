@@ -28,7 +28,7 @@ import itertools
 from typing import Any, Callable, Dict, List, Sequence, Tuple, Union
 
 from ..core import CacheMetrics
-from .prefix_store import Node, TokenBlock
+from .prefix_store import Node, TokenBlock, blocking_cause
 
 
 class ReferencePrefixStore:
@@ -105,12 +105,16 @@ class ReferencePrefixStore:
         usable: List[Node] = []
         touched: List[Node] = []
         broken = False
+        cause = None          # first gap's whereabouts, as in PrefixStore
         for node in chain:
             hit = node.resident
             if not hit:
                 broken = True
+                if cause is None:
+                    cause = blocking_cause(node)
             self.metrics_obj.record_access(hit=hit,
-                                           effective=hit and not broken)
+                                           effective=hit and not broken,
+                                           cause=cause)
             if hit:
                 if not broken:
                     usable.append(node)
@@ -137,6 +141,7 @@ class ReferencePrefixStore:
                             else payloads[i])
             node.nbytes = nbytes_per_block
             node.resident = True
+            node.ever_resident = True
             self.used += nbytes_per_block
             fresh.append(node)
         for node in reversed(fresh):              # leaf first, root last
@@ -207,4 +212,5 @@ class ReferencePrefixStore:
         return self.metrics_obj.evictions
 
     def metrics(self) -> Dict[str, float]:
+        self.metrics_obj.check_attribution()
         return {**self.metrics_obj.as_dict(), "used_bytes": self.used}

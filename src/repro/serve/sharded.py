@@ -36,6 +36,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core import (BlockMeta, CacheMetrics, JobDAG, MessageBus, PeerTracker,
                     PeerTrackerMaster, TaskSpec)
+from ..obs.trace import TID_BUS as _TID_BUS
 from .engine import Request, ServeEngine
 from .prefix_store import PrefixStore
 from .scheduler import Scheduler, StepCostModel
@@ -74,11 +75,12 @@ class ShardedFrontend:
                  scheduler: Union[str, Scheduler, None] = None,
                  max_queue: Optional[int] = None,
                  clock: Optional[StepCostModel] = None,
-                 eos_interval: int = 8, tp: int = 1) -> None:
+                 eos_interval: int = 8, tp: int = 1,
+                 stats_level: str = "full") -> None:
         assert n_shards >= 1
         self.n_shards = n_shards
         self.block_tokens = block_tokens
-        self.bus = MessageBus(record_log=False)
+        self.bus = MessageBus(record_log=False, stats_level=stats_level)
         self.trackers = [PeerTracker(k, self.bus) for k in range(n_shards)]
         for tr in self.trackers:
             # per-replica eviction logs are test/debug instrumentation;
@@ -118,6 +120,17 @@ class ShardedFrontend:
                 pool_blocks=pool_blocks, paged=paged,
                 scheduler=scheduler, max_queue=max_queue, clock=clock,
                 eos_interval=eos_interval, tp=tp))
+
+    # ------------------------------------------------------------------ obs
+    def attach_trace(self, recorder) -> None:
+        """Wire one ``TraceRecorder`` through the whole tier: each shard's
+        engine becomes a pid of its own (``shard{k}``), and the
+        coordination bus a final pid with its messages on the bus lane."""
+        for k, eng in enumerate(self.shards):
+            eng.attach_trace(recorder, pid=k, name=f"shard{k}")
+        recorder.label(self.n_shards, "bus", tid=_TID_BUS)
+        self.bus.trace = recorder
+        self.bus.trace_pid = self.n_shards
 
     # ---------------------------------------------------------- coordination
     def _ns(self, shard: int, ident: str) -> str:
@@ -246,6 +259,7 @@ class ShardedFrontend:
         cache = CacheMetrics()
         for eng in self.shards:
             cache = cache.merge(eng.store.metrics_obj)
+        cache.check_attribution()
         out = cache.as_dict()
         out["used_bytes"] = sum(e.store.used for e in self.shards)
         out["host_used_bytes"] = sum(getattr(e.store, "host_used", 0)

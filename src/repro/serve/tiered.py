@@ -58,10 +58,11 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 from .. import quant as quantlib
 from ..core import EvictionIndex, Policy, make_policy
 from ..quant import QuantSpec
+from ..obs.trace import TID_STORE as _TID_STORE
 from .disk_pool import DiskBlockPool
 from .host_pool import HostBlockPool
 from .kv_pool import KVBlockPool
-from .prefix_store import Node, PrefixStore
+from .prefix_store import Node, PrefixStore, blocking_cause
 
 
 class TieredKVStore(PrefixStore):
@@ -153,6 +154,18 @@ class TieredKVStore(PrefixStore):
             return node.nbytes
         return self.host_pool.block_nbytes
 
+    def _trace_move(self, name: str, node: Node, *, src: str,
+                    dst: Optional[str], policy: Policy,
+                    quant: bool = False) -> None:
+        """One tier-transition instant, stamped with the deciding
+        policy's eviction key AT decision time (why this victim)."""
+        if self.trace is None:
+            return
+        self.trace.instant(name, "store", self.trace_pid, _TID_STORE, args={
+            "uid": node.uid, "block": node.block_id, "src": src, "dst": dst,
+            "quant": quant,
+            "key": str(policy.eviction_key(node.block_id, self.state))})
+
     # ---------------------------------------------------------------- reads
     def lookup(self, tokens: Sequence[int]) -> List[Node]:
         """Longest chain resident in *any* tier from the root; demoted
@@ -173,6 +186,9 @@ class TieredKVStore(PrefixStore):
         touched_t2: List[Node] = []
         broken = False
         all_t0 = True
+        cause = None        # first non-tier-0 node: the chain's blocker
+        blocking = [] if self.trace is not None else None
+        ineff: Dict[str, int] = {}
         for node in chain:
             in_t0 = node.resident
             in_t1 = node.host_payload is not None
@@ -182,9 +198,16 @@ class TieredKVStore(PrefixStore):
                 broken = True
             if not in_t0:
                 all_t0 = False
+                if cause is None:
+                    cause = blocking_cause(node)
+                if blocking is not None:
+                    blocking.append((node.uid, blocking_cause(node)))
+            effective = hit and not broken and all_t0
             self.metrics_obj.record_access(
-                hit=hit, effective=hit and not broken and all_t0,
-                tier=1 if in_t1 else (2 if in_t2 else 0))
+                hit=hit, effective=effective,
+                tier=1 if in_t1 else (2 if in_t2 else 0), cause=cause)
+            if hit and not effective:
+                ineff[cause] = ineff.get(cause, 0) + 1
             if hit and not broken:
                 usable.append(node)
             if in_t0:
@@ -199,6 +222,12 @@ class TieredKVStore(PrefixStore):
             self.host_policy.on_access(node.block_id)
         for node in reversed(touched_t0):
             self.policy.on_access(node.block_id)
+        if self.trace is not None:
+            self.trace.instant(
+                "store.lookup", "store", self.trace_pid, _TID_STORE,
+                args={"blocks": len(chain), "usable": len(usable),
+                      "broken": broken, "blocking": blocking,
+                      "ineffective": ineff})
         demoted = [n for n in usable if not n.resident]
         if demoted:
             self._promote(demoted, exclude={n.block_id for n in chain})
@@ -235,6 +264,8 @@ class TieredKVStore(PrefixStore):
             if self._demote_past_host(node):
                 return
             return super()._evict(node)
+        self._trace_move("store.demote", node, src="device", dst="host",
+                         policy=self.policy, quant=self.quant is not None)
         host_idx = self.host_pool.alloc()
         self._pending_demotions.append((node.payload, host_idx))
         node.host_payload = host_idx
@@ -270,6 +301,9 @@ class TieredKVStore(PrefixStore):
         if (self.disk_used + dbytes > self.disk_capacity
                 or not self.disk_pool.free_list):
             return False
+        self._trace_move("store.demote", node, src="device", dst="disk",
+                         policy=self.policy,
+                         quant=self.disk_quant is not None)
         out = self.device_pool.read_rows([node.payload], quant=self.quant)
         blocks, scales = out if self.quant is not None else (out, None)
         blocks, scales = quantlib.transcode_tree_np(
@@ -346,6 +380,8 @@ class TieredKVStore(PrefixStore):
         nothing to coordinate."""
         if self._demote_to_disk(node):
             return
+        self._trace_move("store.evict", node, src="host", dst=None,
+                         policy=self.host_policy)
         self._release_host(node)
         node.nbytes = 0
         self.metrics_obj.host_evictions += 1
@@ -375,6 +411,10 @@ class TieredKVStore(PrefixStore):
         if (self.disk_used + dbytes > self.disk_capacity
                 or not self.disk_pool.free_list):
             return False
+        self._trace_move(
+            "store.demote", node, src="host", dst="disk",
+            policy=self.host_policy,
+            quant=self.disk_quant is not None and self.disk_quant != self.quant)
         # the victim's host row may still be an unflushed pending demotion
         # (selected by _make_host_room inside the same _make_room batch) —
         # its bytes must land in host memory before we can read them
@@ -413,6 +453,8 @@ class TieredKVStore(PrefixStore):
 
     def _evict_disk(self, node: Node) -> None:
         """The ladder's last rung: the block dies for real."""
+        self._trace_move("store.evict", node, src="disk", dst=None,
+                         policy=self.disk_policy)
         self._release_disk(node)
         node.nbytes = 0
         self.metrics_obj.disk_evictions += 1
@@ -456,6 +498,13 @@ class TieredKVStore(PrefixStore):
                 self.metrics_obj.dequantized_promotions += len(src_rows)
             self.metrics_obj.promotion_dispatches += 1
         for node, dev in zip(nodes, dev_rows):
+            if self.trace is not None:
+                self._trace_move(
+                    "store.promote", node,
+                    src="host" if node.host_payload is not None else "disk",
+                    dst="device",
+                    policy=(self.host_policy if node.host_payload is not None
+                            else self.disk_policy))
             if node.host_payload is not None:
                 self.host_pool.free(node.host_payload)
                 node.host_payload = None

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core import (Belady, CacheManager, CacheMetrics, DagState, JobDAG,
                     MessageBus, MessageStats, PeerTracker, PeerTrackerMaster,
                     TaskSpec, make_policy)
+from ..obs.trace import TID_BUS as _TID_BUS
 
 
 @dataclass
@@ -77,13 +78,25 @@ class SimResult:
 class ClusterSim:
     def __init__(self, n_workers: int, hw: HardwareModel, policy: str = "lerc",
                  policy_kwargs: Optional[dict] = None,
-                 cache_outputs: bool = True) -> None:
+                 cache_outputs: bool = True,
+                 trace=None, stats_level: str = "full") -> None:
         self.n_workers = n_workers
         self.hw = hw
+        # obs: an attached TraceRecorder (None = zero-overhead off). Tasks
+        # are retrospective X events on the VIRTUAL clock — pid 0 with one
+        # lane per worker; the bus is pid 1.
+        self.trace = trace
         # the coordination plane: driver-side master (authoritative DAG +
         # state) and one worker-side tracker per machine, each holding its
         # own DagState replica fed only by bus messages
-        self.bus = MessageBus(record_log=False)
+        self.bus = MessageBus(record_log=False, stats_level=stats_level)
+        if trace is not None:
+            trace.label(0, "sim")
+            for w in range(n_workers):
+                trace.label(0, "sim", tid=w, tname=f"worker{w}")
+            trace.label(1, "bus", tid=_TID_BUS)
+            self.bus.trace = trace
+            self.bus.trace_pid = 1
         self.trackers = [PeerTracker(w, self.bus) for w in range(n_workers)]
         self.master = PeerTrackerMaster(self.bus, n_workers)
         self.dag = self.master.dag        # driver's view (scheduling)
@@ -250,6 +263,13 @@ class ClusterSim:
                 free_slots[worker] -= 1
                 dur = self._task_duration(task, worker, clock)
                 task_runtimes[task.id] = dur
+                if self.trace is not None:
+                    # sim time is in seconds; the recorder's virtual clock
+                    # is milliseconds (1 vt unit -> 1ms on export)
+                    self.trace.complete(
+                        task.id, "task", 0, worker,
+                        vt=clock * 1e3, dur=dur * 1e3,
+                        args={"job": task.job, "worker": worker})
                 heapq.heappush(events, (clock + dur, next(seq), "finish",
                                         task.id, worker))
 
@@ -302,6 +322,7 @@ class ClusterSim:
             try_schedule()
 
         self.verify_replicas()
+        self.metrics.check_attribution()
         return SimResult(makespan=clock, metrics=self.metrics,
                          messages=self.messages, per_job_finish=per_job_finish,
                          task_runtimes=task_runtimes)
@@ -352,11 +373,22 @@ class ClusterSim:
         # Def. 1 effectiveness, judged before any access mutates state
         all_cached = all(self.managers[self.home[b]].in_memory(b)
                          for b in cacheable_inputs)
+        # ineffective-hit attribution: the first blocking peer's location
+        # (a disk-resident blocker makes the group one load from complete;
+        # an absent one costs a recompute)
+        cause = None
+        if not all_cached:
+            blocker = next(b for b in cacheable_inputs
+                           if not self.managers[self.home[b]].in_memory(b))
+            cause = ("disk"
+                     if blocker in self.managers[self.home[blocker]].disk
+                     else "never_cached")
         fetch = 0.0
         for b in cacheable_inputs:
             t, hit = self._fetch_time(b, worker, clock)
             fetch = max(fetch, t)          # parallel fetch: slowest peer wins
-            self.metrics.record_access(hit=hit, effective=hit and all_cached)
+            self.metrics.record_access(hit=hit, effective=hit and all_cached,
+                                       cause=cause)
             self._policies[self.home[b]].on_access(b)
             pol = self._policies[self.home[b]]
             if isinstance(pol, Belady):
