@@ -1,0 +1,231 @@
+"""Fault injection + graceful degradation (PR 10): the chaos-smoke bench.
+
+Three seeded, fully deterministic arms, each gating a recovery invariant:
+
+* **serve_failover** — a 2-shard frontend replays the same Poisson trace
+  clean and under a fault plan (one mid-trace shard crash + a lossy
+  status channel). Gates: every admitted request finishes (failover
+  requeues in-flight work, deadlines unchanged), the rebuilt replica
+  passes ``verify_replicas`` after the anti-entropy resync, and goodput
+  degrades gracefully — ``goodput_fault / goodput_clean >=``
+  ``MIN_GOODPUT_RATIO``, not a cliff.
+* **disk_quarantine** — one tiered engine whose disk tier fails every
+  read: after ``quarantine_after`` consecutive I/O errors the tier is
+  fenced and the run completes with ZERO uncaught exceptions, degraded to
+  the two-tier (host + recompute) semantics.
+* **sim_lineage** — a chain job re-run with a mid-run worker crash: the
+  lost blocks recompute through the ``JobDAG`` lineage, charged to the
+  makespan (``makespan_fault > makespan_clean``), and the replica
+  coherence proof inside ``ClusterSim.run`` covers the crashed run too.
+
+    PYTHONPATH=src python -m benchmarks.fault_recovery [--toy]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from .common import print_table, save_results
+
+BT = 8                  # block_tokens
+MAX_NEW = 4
+MAX_SEQ = 96
+CRASH_T = 5.0           # virtual-clock shard-crash time (mid-trace)
+DEADLINE = 60.0         # generous TTFT SLO: clean goodput ~1.0
+MIN_GOODPUT_RATIO = 0.5
+
+
+def _prompts(vocab, n, prefix_tokens=16, seed=0):
+    rng = np.random.default_rng(seed)
+    n_families = max(n // 4, 1)
+    prefixes = [list(rng.integers(0, vocab, prefix_tokens))
+                for _ in range(n_families)]
+    return [prefixes[i % n_families] + list(rng.integers(0, vocab, 8))
+            for i in range(n)]
+
+
+def _frontend(cfg, params, blk, faults=None):
+    from repro.serve import ShardedFrontend
+    return ShardedFrontend(cfg, params, 2, max_slots=2, max_seq=MAX_SEQ,
+                           capacity_bytes=48 * blk, policy="lerc",
+                           block_tokens=BT, prefill_chunk=8,
+                           max_queue=64, faults=faults)
+
+
+def _serve_failover(cfg, params, blk, n_requests) -> dict:
+    from repro.faults import BusFault, FaultPlan
+    from repro.serve import TracedRequest, latency_stats, play_trace
+    from repro.sim import poisson_arrivals
+
+    prompts = _prompts(cfg.vocab, n_requests)
+    times = poisson_arrivals(n_requests, rate=1.5, seed=3)
+    trace = [TracedRequest(t=t, prompt=p, max_new=MAX_NEW,
+                           deadline=DEADLINE)
+             for t, p in zip(times, prompts)]
+    plan = FaultPlan(
+        seed=7,
+        shard_crashes=((CRASH_T, 0),),
+        bus_faults=(BusFault(channel="status", drop_p=0.2),))
+
+    clean = _frontend(cfg, params, blk)
+    stats_clean = latency_stats(play_trace(clean, trace))
+    clean.verify_replicas()
+    clean.close()
+
+    front = _frontend(cfg, params, blk, faults=plan)
+    report = play_trace(front, trace)
+    stats = latency_stats(report)
+    m = front.metrics()
+    # recovery invariants: the crash actually fired, every admitted
+    # request still finished, and the rebuilt replica reconverged
+    assert m["shard_crashes"] == 1, "scheduled shard crash did not fire"
+    unfinished = [r for r in report.requests
+                  if not r.cancelled and r.finished_at is None]
+    assert not unfinished, \
+        f"failover lost {len(unfinished)} admitted requests"
+    front.resync_replicas()
+    front.verify_replicas()
+    front.close()
+    ratio = stats["goodput"] / max(stats_clean["goodput"], 1e-9)
+    assert ratio >= MIN_GOODPUT_RATIO, \
+        f"goodput fell off a cliff under faults: {ratio:.3f}"
+    return {
+        "arm": "serve_failover",
+        "goodput_clean": stats_clean["goodput"],
+        "goodput_fault": stats["goodput"],
+        "goodput_ratio": round(ratio, 4),
+        "ttft_p95_clean": stats_clean["ttft_p95"],
+        "ttft_p95_fault": stats["ttft_p95"],
+        "shard_crashes": m["shard_crashes"],
+        "failover_retries": m["failover_retries"],
+        "msg_dropped": m["msg_dropped"],
+        "msg_resyncs": m["msg_resyncs"],
+        "replicas_ok": True,
+    }
+
+
+def _disk_quarantine(cfg, params, blk, n_families) -> dict:
+    from repro.faults import FaultPlan
+    from repro.serve import ServeEngine, TieredKVStore
+
+    rng = np.random.default_rng(5)
+    prefixes = [list(rng.integers(0, cfg.vocab, 32))
+                for _ in range(n_families)]
+    suffix = list(rng.integers(0, cfg.vocab, 8))
+    store = TieredKVStore(8 * blk, "lerc", block_tokens=BT,
+                          host_capacity_bytes=3 * blk,
+                          disk_capacity_bytes=64 * blk)
+    store.faults = FaultPlan(disk_read_error_p=1.0,
+                             quarantine_after=2).injector()
+    eng = ServeEngine(cfg, params, max_slots=1, max_seq=MAX_SEQ,
+                      store=store, prefill_chunk=8)
+    # warm every family (later ones demote earlier ones device->host->
+    # disk), then re-reference: every promotion that touches the disk
+    # tier fails, and after quarantine_after consecutive errors the tier
+    # is fenced — the whole loop must complete without an exception
+    for pfx in prefixes:
+        eng.submit(pfx + suffix, max_new=MAX_NEW)
+        eng.run()
+    finished = 0
+    for pfx in prefixes:
+        req = eng.submit(list(pfx), max_new=MAX_NEW)
+        eng.run()
+        finished += req.finished_at is not None or req.done
+    m = eng.metrics()
+    eng.close()
+    assert m["disk_quarantines"] == 1, \
+        f"disk tier not quarantined: {m['disk_quarantines']}"
+    assert m["disk_io_errors"] >= 2
+    assert finished == n_families, "degraded engine dropped requests"
+    return {
+        "arm": "disk_quarantine",
+        "disk_io_errors": m["disk_io_errors"],
+        "disk_quarantines": m["disk_quarantines"],
+        "disk_evictions": m["disk_evictions"],
+        "completed": finished,
+        "exceptions": 0,
+    }
+
+
+def _chain_dag(n_tasks, block_size):
+    from repro.core import BlockMeta, JobDAG, TaskSpec
+    dag = JobDAG()
+    dag.add_block(BlockMeta("src", block_size, "src", 0))
+    prev = "src"
+    for i in range(n_tasks):
+        out = f"b{i}"
+        dag.add_block(BlockMeta(out, block_size, "chain", i))
+        dag.add_task(TaskSpec(id=f"t{i}", inputs=(prev,), output=out,
+                              job="chain"))
+        prev = out
+    return dag
+
+
+def _sim_lineage(n_tasks) -> dict:
+    from repro.faults import FaultPlan
+    from repro.sim import ClusterSim, HardwareModel
+
+    size = 10 * 2 ** 20
+    hw = HardwareModel(cache_bytes=8 * size)
+
+    sim = ClusterSim(1, hw)
+    sim.submit(_chain_dag(n_tasks, size))
+    clean = sim.run()
+
+    crash_t = clean.makespan / 2
+    sim_f = ClusterSim(1, hw,
+                       faults=FaultPlan(worker_crashes=((crash_t, 0),)))
+    sim_f.submit(_chain_dag(n_tasks, size))
+    fault = sim_f.run()        # verify_replicas runs inside
+    assert sim_f.worker_crashes_fired == 1
+    assert fault.makespan > clean.makespan, \
+        "lineage recompute not charged to the makespan"
+    return {
+        "arm": "sim_lineage",
+        "makespan_clean_s": round(clean.makespan, 4),
+        "makespan_fault_s": round(fault.makespan, 4),
+        "recompute_overhead_s": round(fault.makespan - clean.makespan, 4),
+        "worker_crashes": sim_f.worker_crashes_fired,
+        "replicas_ok": True,
+    }
+
+
+def main(argv=None, toy: bool = False) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--toy", action="store_true",
+                    help="CI scale: fewer requests / shorter chain")
+    args = ap.parse_args(argv if argv is not None else [])
+    args.toy = args.toy or toy
+
+    import jax
+    from repro import configs
+    from repro.models import init_params, model_spec
+    from repro.serve import PrefixStore, ServeEngine
+
+    cfg = configs.get("qwen2_7b", smoke=True)
+    cfg = dataclasses.replace(cfg, dtype=jax.numpy.float32)
+    params = init_params(jax.random.key(0), model_spec(cfg),
+                         dtype=cfg.dtype)
+    probe = ServeEngine(cfg, params, max_slots=1, max_seq=MAX_SEQ,
+                        store=PrefixStore(1 << 30, "lerc", block_tokens=BT),
+                        pool_blocks=1)
+    blk = probe._block_nbytes()
+
+    n_requests = 12 if args.toy else 24
+    rows = [
+        _serve_failover(cfg, params, blk, n_requests),
+        _disk_quarantine(cfg, params, blk, n_families=3 if args.toy else 5),
+        _sim_lineage(n_tasks=4 if args.toy else 8),
+    ]
+    print_table("Fault recovery: failover / quarantine / lineage "
+                "(all recovery gates asserted)",
+                rows, sorted({k for r in rows for k in r},
+                             key=lambda k: (k != "arm", k)))
+    save_results("fault_recovery", rows)
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

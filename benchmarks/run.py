@@ -41,10 +41,10 @@ def main(argv=None) -> None:
     ap.add_argument("--toy", action="store_true",
                     help="CI scale for benchmarks that support it")
     ap.add_argument("--json", nargs="?", default=None,
-                    const="BENCH_9.json", metavar="PATH",
+                    const="BENCH_10.json", metavar="PATH",
                     help="write one artifact collecting every executed "
                          "benchmark's result rows (default path when the "
-                         "flag is bare: BENCH_9.json at the repo root)")
+                         "flag is bare: BENCH_10.json at the repo root)")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:])
 
     from . import fig3_all_or_nothing, fig5_makespan, fig6_fig7_hit_ratios
@@ -65,6 +65,7 @@ def main(argv=None) -> None:
                      ("serve_throughput", "serve_throughput"),
                      ("serve_latency", "serve_latency"),
                      ("tiered_serve", "tiered_serve"),
+                     ("fault_recovery", "fault_recovery"),
                      ("coordination_overhead", "coordination_overhead"),
                      ("pipeline_bench", "pipeline"),
                      ("roofline", "roofline")):

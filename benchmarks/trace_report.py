@@ -86,6 +86,14 @@ def rejected_count(events: List[dict]) -> int:
                and ev.get("name") == "rejected")
 
 
+def retried_count(events: List[dict]) -> int:
+    """Bounces the trace loop re-offered (``sched.retry`` instants);
+    the engine's ``rejected`` instant fires for those too, so final
+    rejections are ``rejected_count - retried_count``."""
+    return sum(1 for ev in events if ev.get("ph") == "i"
+               and ev.get("name") == "sched.retry")
+
+
 def latency_from_trace(events: List[dict]) -> Dict[str, float]:
     """Reconstruct ``repro.serve.latency_stats`` from the trace alone —
     identical keys, identical rounding."""
@@ -105,9 +113,11 @@ def latency_from_trace(events: List[dict]) -> Dict[str, float]:
             met += r.get("finished_at") is not None
         else:
             met += r["first_token_at"] <= r["deadline"]
-    rejected = rejected_count(events)
+    retried = retried_count(events)
+    rejected = rejected_count(events) - retried
     offered = len(reqs) + rejected
     out = {"n_offered": offered, "n_rejected": rejected,
+           "n_retried": retried,
            "goodput": round(float(met) / max(offered, 1), 4)}
     for name, xs in (("ttft", ttft), ("tpot", tpot)):
         for q in (50, 95, 99):

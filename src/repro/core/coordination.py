@@ -41,6 +41,8 @@ a reload makes it complete again).
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 import pickle
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -51,6 +53,10 @@ from .metrics import MessageStats
 
 # message kinds that belong to the LERC-specific channel (vs legacy status)
 LERC_KINDS = frozenset({"peer_profile", "evict_report", "evict_bcast"})
+
+# anti-entropy kinds ride a reliable RPC channel (they ARE the recovery
+# mechanism): fault injection never drops, delays or duplicates them
+RESYNC_KINDS = frozenset({"resync_request", "resync"})
 
 
 def payload_nbytes(payload: tuple) -> int:
@@ -148,6 +154,15 @@ class MessageBus:
         # obs: an attached ``repro.obs.TraceRecorder`` (None = off)
         self.trace = None
         self.trace_pid = 0
+        # fault injection (repro.faults.FaultInjector, None = healthy bus).
+        # ``now`` is the embedder's virtual clock, advanced via
+        # ``flush_delayed``; delayed messages deliver when it passes their
+        # due time, in (due, send-order) order — i.e. possibly reordered
+        # relative to healthy traffic.
+        self.faults = None
+        self.now = 0.0
+        self._delayed: List[Tuple[float, int, Message]] = []
+        self._dseq = itertools.count()
 
     def register(self, name: str, handler: Callable[[Message], None]) -> None:
         self._endpoints[name] = handler
@@ -180,7 +195,42 @@ class MessageBus:
             self.trace.instant(
                 "bus." + msg.kind, "bus", self.trace_pid, _TID_BUS,
                 args={"src": msg.src, "dst": msg.dst, "bytes": msg.nbytes})
+        if self.faults is not None and msg.kind not in RESYNC_KINDS:
+            act = self.faults.bus_action(msg.kind)
+            if act is not None:
+                if act[0] == "drop":
+                    self.stats.dropped += 1
+                    self.faults.count("fault.bus_drop")
+                    if self.trace is not None:
+                        self.trace.instant(
+                            "fault.bus_drop", "bus", self.trace_pid,
+                            _TID_BUS, args={"kind": msg.kind,
+                                            "dst": msg.dst})
+                    return
+                if act[0] == "delay":
+                    self.stats.delayed += 1
+                    self.faults.count("fault.bus_delay")
+                    heapq.heappush(self._delayed,
+                                   (self.now + act[1], next(self._dseq),
+                                    msg))
+                    return
+                # duplicate: the message arrives twice (handlers are
+                # idempotent by protocol design — this proves it)
+                self.stats.duplicated += 1
+                self.faults.count("fault.bus_dup")
+                self._endpoints[msg.dst](msg)
         self._endpoints[msg.dst](msg)
+
+    def flush_delayed(self, now: float) -> int:
+        """Advance the bus clock and deliver every delayed message now due,
+        in (due time, send order). Returns the number delivered."""
+        self.now = max(self.now, now)
+        n = 0
+        while self._delayed and self._delayed[0][0] <= self.now:
+            _, _, msg = heapq.heappop(self._delayed)
+            self._endpoints[msg.dst](msg)
+            n += 1
+        return n
 
 
 def apply_status(state: DagState, event: str, ident,
@@ -198,6 +248,13 @@ def apply_status(state: DagState, event: str, ident,
         if eviction_log is not None and ident in state.cached:
             eviction_log.append(ident)
         state.on_evicted(ident)
+    elif event == "lost":
+        # crash loss: no disk copy survives, so the producer must re-run
+        # (lineage recompute). Relayed like a silent eviction so every
+        # replica resurrects the same references.
+        if eviction_log is not None and ident in state.cached:
+            eviction_log.append(ident)
+        state.on_lost(ident)
     elif event == "task_done":
         state.on_task_done(ident)
     elif event == "task_removed":
@@ -212,7 +269,12 @@ def apply_status(state: DagState, event: str, ident,
         # DAG-less replicas (the policy ships no peer profile) still drop
         # the block from their residency sets so those stay bounded.
         state.forget_block(ident)
-        if ident in state.dag.blocks:
+        # tolerate replicas that are mid-divergence (dropped/duplicated
+        # status traffic, crash purges): only detach the skeleton node if
+        # it is genuinely unreferenced here too
+        if (ident in state.dag.blocks
+                and not state.dag.consumers.get(ident)
+                and ident not in state.dag.producer):
             state.dag.remove_block(ident)
     else:
         raise ValueError(f"unknown status event {event!r}")
@@ -256,14 +318,68 @@ class PeerTracker:
                     self.state.on_task_added(t.id)
         elif msg.kind == "status":
             event, ident = msg.payload
-            apply_status(self.state, event, ident,
-                         eviction_log=(self.eviction_log
-                                       if self.record_eviction_log else None))
+            try:
+                apply_status(self.state, event, ident,
+                             eviction_log=(self.eviction_log
+                                           if self.record_eviction_log
+                                           else None))
+            except KeyError:
+                if self.bus.faults is None:
+                    raise
+                # a lossy bus already skipped earlier updates, so later
+                # ones can hit state they assume present; the replica is
+                # diverged either way and anti-entropy resync is the
+                # repair path — folding must not kill the worker
+                self.bus.stats.diverged_applies += 1
         elif msg.kind == "evict_bcast":
             (block,) = msg.payload
             if self.record_eviction_log and block in self.state.cached:
                 self.eviction_log.append(block)
-            self.state.on_evicted(block)
+            try:
+                self.state.on_evicted(block)
+            except KeyError:
+                if self.bus.faults is None:
+                    raise
+                self.bus.stats.diverged_applies += 1
+        elif msg.kind == "resync":
+            self._install_snapshot(msg.payload)
+
+    # ------------------------------------------------------------ anti-entropy
+    def request_resync(self, include_dag: bool = True) -> None:
+        """Ask the master for an authoritative snapshot (anti-entropy):
+        used to seed a freshly rebuilt replica after a crash, or to
+        reconverge one that drifted behind dropped status traffic.
+        ``include_dag=False`` skips DAG structure (replicas on a cluster
+        that ships no peer profiles deliberately stay DAG-less)."""
+        self.bus.send(Message("resync_request",
+                              (self.worker_id, include_dag),
+                              src=self.name, dst="master"))
+
+    def _install_snapshot(self, snap: tuple) -> None:
+        """Replace this replica's view with the master's. The DagState
+        object is mutated IN PLACE (co-located cache managers and eviction
+        indexes hold references to it), then ``rebuild()`` re-derives every
+        counter so listeners resort their keys."""
+        blocks, tasks, materialized, cached, done = snap
+        if blocks is not None:
+            want_b = {b.id for b in blocks}
+            want_t = {t.id for t in tasks}
+            for tid in [t for t in self.dag.tasks if t not in want_t]:
+                self.dag.remove_task(tid)
+            for bid in [b for b in self.dag.blocks if b not in want_b]:
+                if (not self.dag.consumers.get(bid)
+                        and bid not in self.dag.producer):
+                    self.dag.remove_block(bid)
+            for b in blocks:
+                if b.id not in self.dag.blocks:
+                    self.dag.add_block(b)
+            for t in tasks:
+                if t.id not in self.dag.tasks:
+                    self.dag.add_task(t)
+        self.state.materialized = set(materialized)
+        self.state.cached = set(cached)
+        self.state.done_tasks = set(done)
+        self.state.rebuild()
 
     # ----------------------------------------------------------- local event
     def local_eviction(self, block: BlockId) -> bool:
@@ -346,6 +462,22 @@ class PeerTrackerMaster:
             event, ident = msg.payload
             apply_status(self.state, event, ident)
             self._broadcast("status", (event, ident))
+        elif msg.kind == "resync_request":
+            worker, include_dag = msg.payload
+            self.bus.stats.resyncs += 1
+            self.bus.send(Message("resync", self._snapshot(include_dag),
+                                  src="master", dst=f"worker:{worker}"))
+
+    def _snapshot(self, include_dag: bool = True) -> tuple:
+        """Authoritative state snapshot for the anti-entropy ``resync``
+        reply: (blocks, tasks, materialized, cached, done_tasks) — the
+        first two None when the requester keeps a DAG-less replica."""
+        dag = (tuple(self.dag.blocks.values()) if include_dag else None,
+               tuple(self.dag.tasks.values()) if include_dag else None)
+        return (*dag,
+                tuple(sorted(self.state.materialized)),
+                tuple(sorted(self.state.cached)),
+                tuple(sorted(self.state.done_tasks)))
 
     def status_update(self, event: str, block_or_task) -> None:
         """Driver-originated status (legacy channel): fold into the

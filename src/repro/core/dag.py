@@ -321,6 +321,44 @@ class DagState:
                 self.eff_ref_count[b] -= 1
         self._notify(inputs)
 
+    def on_task_undone(self, tid: TaskId) -> None:
+        """Inverse of ``on_task_done``: the task's output was *lost* (a
+        crashed worker took it), so the task must re-run and its references
+        to its inputs are live again. ``missing`` is recomputed from the
+        sets — it was not maintained while the task sat in
+        ``done_tasks``."""
+        if tid not in self.done_tasks:
+            return
+        self.done_tasks.discard(tid)
+        inputs = self.dag.tasks[tid].inputs
+        self.missing[tid] = sum(
+            1 for b in inputs
+            if b in self.materialized and b not in self.cached)
+        effective = self.missing[tid] == 0
+        for b in inputs:
+            self.ref_count[b] += 1
+            if effective:
+                self.eff_ref_count[b] += 1
+        self._notify(inputs)
+
+    def on_lost(self, block: BlockId) -> None:
+        """Crash loss: the block left memory AND its materialization is
+        gone — unlike ``on_evicted`` there is no disk copy to reload, so
+        the producing task must re-run (lineage recompute). Consumers stop
+        counting it as a *missing* member (an unmaterialized input is
+        absent, not missing), and a done producer is resurrected."""
+        self.on_evicted(block)
+        if block not in self.materialized:
+            return
+        self.materialized.discard(block)
+        # after the eviction above the block was materialized-but-uncached,
+        # i.e. "missing" in every live consumer group; unmaterializing it
+        # removes it from that count
+        self._dec_missing(block)
+        producer = self.dag.producer.get(block)
+        if producer is not None and producer in self.done_tasks:
+            self.on_task_undone(producer)
+
     def on_task_added(self, tid: TaskId) -> None:
         """Incremental counterpart of ``rebuild`` for one new task: charge
         its references (serve: a request chain arrived). O(group size)."""

@@ -82,6 +82,11 @@ class CacheMetrics:
     dequantized_promotions: int = 0  # promotions that widened it back
     promotion_dispatches: int = 0    # batched transfers (1 per tier per
     #                                  promotion, however many blocks ride)
+    # ---- fault injection + graceful degradation (robustness PR) ----
+    disk_io_errors: int = 0          # injected/real OSErrors on the disk tier
+    disk_quarantines: int = 0        # disk tiers taken out of rotation
+    promotion_stalls: int = 0        # slow promotions charged to the clock
+    promotion_timeouts: int = 0      # promotions abandoned past the budget
     # ---- effective-hit attribution (obs PR): ineffective hits bucketed
     # by where the first blocking peer block sat at access time ----
     ineffective_by_cause: Dict[str, int] = field(default_factory=dict)
@@ -154,6 +159,13 @@ class MessageStats:
     point_to_point: int = 0               # individual messages on the wire
     payload_bytes: int = 0                # serialized payload bytes, all msgs
     lerc_bytes: int = 0                   # ...restricted to the LERC channel
+    # ---- fault injection + recovery (robustness PR) ----
+    dropped: int = 0                      # messages lost to injected faults
+    delayed: int = 0                      # ... delivered late
+    duplicated: int = 0                   # ... delivered twice
+    resyncs: int = 0                      # anti-entropy snapshots served
+    diverged_applies: int = 0             # status folds skipped on replicas
+    #                                       already diverged by lost traffic
 
     def merge(self, other: "MessageStats") -> "MessageStats":
         return _merged(self, other)

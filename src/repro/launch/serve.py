@@ -17,6 +17,7 @@ goodput-under-deadline on the deterministic virtual clock:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
@@ -26,6 +27,7 @@ import numpy as np
 
 from .. import configs
 from ..core import POLICIES
+from ..faults import FaultPlan
 from ..models import init_params, model_spec
 from ..obs import TraceRecorder, jsonable
 from ..serve import (BudgetedScheduler, PrefixStore, ServeEngine,
@@ -120,6 +122,18 @@ def serve_main(argv=None) -> int:
     ap.add_argument("--max-queue", type=int, default=None,
                     help="admission-control queue bound (per shard); "
                          "arrivals past it are shed with QueueFull")
+    ap.add_argument("--retry-rejected", type=int, default=0,
+                    help="re-submit QueueFull-shed arrivals up to N times, "
+                         "waiting the engine's advertised retry-after "
+                         "between attempts (retries count against goodput)")
+    ap.add_argument("--fault-plan", default=None, metavar="PATH",
+                    help="JSON repro.faults.FaultPlan: seeded shard "
+                         "crashes, bus drop/delay/dup, disk I/O errors, "
+                         "slow promotions — the run then exercises "
+                         "failover, quarantine and resync deterministically")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="override the fault plan's seed (same plan, "
+                         "different draw sequence)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record a Chrome/Perfetto trace of the whole run "
@@ -134,16 +148,47 @@ def serve_main(argv=None) -> int:
                          "as JSON")
     args = ap.parse_args(argv)
 
+    # flag cross-validation up front — a bad combination must die with an
+    # actionable message before any model weights are initialised, not
+    # half-way through a run (or worse, be silently "repaired")
+    if args.disk_cache_mb > 0 and args.host_cache_kb <= 0:
+        ap.error("--disk-cache-mb needs --host-cache-kb > 0: blocks demote "
+                 "device -> host -> disk, so a disk tier without a host "
+                 "tier is unreachable. Add --host-cache-kb.")
+    if args.disk_dir is not None and args.disk_cache_mb <= 0:
+        ap.error("--disk-dir has no effect without --disk-cache-mb > 0 "
+                 "(there is no disk tier to place there)")
+    if args.kv_quant != "none" and args.host_cache_kb <= 0:
+        ap.error(f"--kv-quant {args.kv_quant} transcodes blocks demoted to "
+                 "the host/disk tiers, which --host-cache-kb 0 disables. "
+                 "Add --host-cache-kb or drop --kv-quant.")
+    if args.prefill_budget is not None and args.scheduler != "budgeted":
+        ap.error(f"--prefill-budget only applies to --scheduler budgeted "
+                 f"(got --scheduler {args.scheduler})")
+    if args.tp > 1 and args.paged is False:
+        ap.error("--tp > 1 shards the paged KV pool; it cannot run on the "
+                 "gather plane forced by --no-paged-attention")
+    if args.fault_seed is not None and args.fault_plan is None:
+        ap.error("--fault-seed overrides a plan's seed; pass --fault-plan")
+    injector = None
+    if args.fault_plan is not None:
+        try:
+            plan = FaultPlan.from_json(args.fault_plan)
+        except (OSError, ValueError, TypeError) as e:
+            ap.error(f"--fault-plan {args.fault_plan}: {e}")
+        if args.fault_seed is not None:
+            plan = dataclasses.replace(plan, seed=args.fault_seed)
+        for _, k in plan.shard_crashes:
+            if not 0 <= k < args.shards:
+                ap.error(f"fault plan crashes shard {k} but --shards is "
+                         f"{args.shards} (valid: 0..{args.shards - 1})")
+        injector = plan.injector()
+
     cfg = configs.get(args.arch, smoke=args.smoke)
     params = init_params(jax.random.key(args.seed), model_spec(cfg),
                          dtype=cfg.dtype)
     host_bytes = args.host_cache_kb * 1024
     disk_bytes = args.disk_cache_mb * 1024 * 1024
-    if disk_bytes > 0 and host_bytes == 0:
-        print("warning: --disk-cache-mb needs --host-cache-kb > 0 (blocks "
-              "demote device->host->disk); disk tier disabled",
-              file=sys.stderr)
-        disk_bytes = 0
     absolute_kv = set(cfg.layer_pattern) <= {"G", "M"}
     if args.paged is None:
         # zero-copy paged attention is the default wherever the KV layout
@@ -171,7 +216,7 @@ def serve_main(argv=None) -> int:
             disk_capacity_bytes=disk_bytes // args.shards,
             disk_dir=args.disk_dir,
             paged=args.paged, scheduler=scheduler,
-            max_queue=args.max_queue, tp=args.tp)
+            max_queue=args.max_queue, tp=args.tp, faults=injector)
     else:
         if host_bytes > 0:
             store: PrefixStore = TieredKVStore(
@@ -181,6 +226,9 @@ def serve_main(argv=None) -> int:
                 kv_quant=args.kv_quant,
                 disk_capacity_bytes=disk_bytes,
                 disk_dir=args.disk_dir)
+            # disk-error / slow-promotion injection: attach before the
+            # engine wires the pools so the disk pool inherits the injector
+            store.faults = injector
         else:
             store = PrefixStore(capacity_bytes=args.cache_kb * 1024,
                                 policy=args.policy,
@@ -223,16 +271,23 @@ def serve_main(argv=None) -> int:
         trace = [TracedRequest(t=t, prompt=p, max_new=args.max_new,
                                deadline=args.deadline_ms)
                  for t, p in zip(times, prompts)]
-        report = play_trace(eng, trace)
+        report = play_trace(eng, trace, retry_rejected=args.retry_rejected)
     else:
         for p in prompts:
             eng.submit(p, max_new=args.max_new)
         eng.run()
     if args.shards > 1:
+        if injector is not None:
+            # lossy status traffic leaves replicas behind by design; the
+            # anti-entropy resync is the documented repair before verify
+            eng.resync_replicas()
         eng.verify_replicas()       # smoke doubles as a coherence proof
     m = eng.metrics()
     if report is not None:
         m.update(latency_stats(report))
+    if injector is not None:
+        for name in sorted(injector.counters):
+            m[name] = injector.counters[name]
     paged_on = (all(e.paged for e in eng.shards) if args.shards > 1
                 else eng.paged)
     print(f"policy={args.policy}  shards={args.shards}  tp={args.tp}  "
@@ -256,6 +311,9 @@ def serve_main(argv=None) -> int:
             json.dump(jsonable({"args": vars(args), "metrics": m}),
                       f, indent=2)
         print(f"metrics: {args.metrics_json}")
+    close = getattr(eng, "close", None)
+    if close is not None:
+        close()       # deterministic disk-tier teardown (memmaps + files)
     return 0
 
 

@@ -141,6 +141,10 @@ class Request:
     deadline: Optional[float] = None    # absolute TTFT deadline, or None
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+    # failover re-admission (repro.faults): how many times a crash has
+    # requeued this request, and the backoff gate before it may re-admit
+    retries: int = 0
+    not_before: float = 0.0
     # un-synced per-step token vectors (pipelined readback)
     _lazy_out: List = field(default_factory=list, repr=False)
 
@@ -356,11 +360,14 @@ class ServeEngine:
         admission control is on and the queue is at ``max_queue``."""
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.rejected += 1
+            retry_after = self.retry_after()
             if self.trace is not None:
                 self.trace.instant(
                     "rejected", "request", self._trace_pid, _TID_REQ,
-                    args={"queued": len(self.queue)})
-            raise QueueFull(f"queue at max_queue={self.max_queue}")
+                    args={"queued": len(self.queue),
+                          "retry_after": retry_after})
+            raise QueueFull(f"queue at max_queue={self.max_queue}",
+                            depth=len(self.queue), retry_after=retry_after)
         req = Request(next(self._rid), list(prompt), max_new,
                       arrival=self.now if arrival is None else arrival,
                       deadline=deadline)
@@ -373,6 +380,21 @@ class ServeEngine:
                       "max_new": req.max_new, "deadline": req.deadline},
                 vt=req.arrival)
         return req
+
+    def retry_after(self) -> float:
+        """Backpressure hint stamped on ``QueueFull``: the estimated
+        virtual-clock wait until a queue slot frees — the nearest-to-done
+        active request's remaining steps priced by the engine's
+        ``StepCostModel`` (decode steps at the current batch size)."""
+        active = [r for r in self.slots if r is not None]
+        per_step = float(self.clock(0, max(len(active), 1), 0))
+        if not active:
+            return per_step
+        steps_left = min(
+            -(-max(len(r.prompt) - r.pos, 0) // self.prefill_chunk)
+            + max(r.max_new - r.n_generated, 0)
+            for r in active)
+        return max(steps_left, 1) * per_step
 
     def cancel(self, req: Request) -> bool:
         """Cancel a request at any point in its lifetime — queued,
@@ -452,13 +474,25 @@ class ServeEngine:
         for i in range(self.B):
             if self.slots[i] is not None or not self.queue:
                 continue
-            pick = self.scheduler.admit_idx(self.queue)
             queued = len(self.queue)
-            if pick == 0:
-                req = self.queue.popleft()
+            if any(r.not_before > self.now for r in self.queue):
+                # failover re-admissions wait out their backoff; everyone
+                # else competes normally. This branch is unreachable
+                # without a crash (not_before defaults to 0.0).
+                eligible = [r for r in self.queue
+                            if r.not_before <= self.now]
+                if not eligible:
+                    break
+                pick = self.scheduler.admit_idx(eligible)
+                req = eligible[pick]
+                self.queue.remove(req)
             else:
-                req = self.queue[pick]
-                del self.queue[pick]
+                pick = self.scheduler.admit_idx(self.queue)
+                if pick == 0:
+                    req = self.queue.popleft()
+                else:
+                    req = self.queue[pick]
+                    del self.queue[pick]
             self._fresh_slots.add(i)
             usable = self.store.lookup(req.prompt)
             if not self.restore_prefix:
@@ -532,6 +566,11 @@ class ServeEngine:
                 self._admit()
         active = [r for r in self.slots if r is not None]
         if not active:
+            if self.queue and all(r.not_before > self.now
+                                  for r in self.queue):
+                # everything queued is backing off: jump the virtual clock
+                # to the earliest re-admission so the loop can't spin
+                self.now = min(r.not_before for r in self.queue)
             return []
         decoding = [r for r in active if r.pos >= len(r.prompt)]
         prefilling = [r for r in active if r.pos < len(r.prompt)]
@@ -627,6 +666,12 @@ class ServeEngine:
         attn_pairs = int((meta[1] * (meta[0] + meta[1]) * pre).sum())
         self.now += float(self.clock(int(meta[1].sum()) - len(decoding),
                                      len(decoding), attn_pairs))
+        stall = getattr(self.store, "pending_stall", 0.0)
+        if stall:
+            # slow promotions this step (injected disk stalls) charge the
+            # virtual clock once, after the step's compute charge
+            self.now += stall
+            self.store.pending_stall = 0.0
         if trace is not None:
             trace.vt = self.now
             trace.counter("engine", pid, {
@@ -718,6 +763,14 @@ class ServeEngine:
             if not self.queue and all(s is None for s in self.slots):
                 return
             self.step()
+
+    def close(self) -> None:
+        """Deterministic teardown of file-backed store resources (the
+        disk tier's memmap row files). Idempotent; safe on stores with
+        no disk tier."""
+        close = getattr(self.store, "close", None)
+        if close is not None:
+            close()
 
     def step_hlo(self) -> str:
         """Compiled-HLO text of the most recent step dispatch (re-lowered

@@ -41,14 +41,39 @@ timed arrival trace with admission control and backpressure.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs.trace import TID_SCHED as _TID_SCHED
+
+
+def _trace_retry(eng, tries: int, wait: float) -> None:
+    """Mark a QueueFull-bounced arrival's re-offer on the trace, so
+    ``trace_report`` can split retried bounces from final rejections
+    (the engine's own ``rejected`` instant fires for both)."""
+    rec = getattr(eng, "trace", None)
+    if rec is not None:
+        rec.instant("sched.retry", "sched", eng._trace_pid, _TID_SCHED,
+                    args={"tries": tries, "wait": wait})
+
 
 class QueueFull(RuntimeError):
-    """Backpressure: the engine's admission queue is at ``max_queue``."""
+    """Backpressure: the engine's admission queue is at ``max_queue``.
+
+    Carries actionable hints for the client: ``depth`` (how deep the
+    queue it bounced off is) and ``retry_after`` (the engine's
+    ``StepCostModel`` estimate of virtual-clock time until a slot —
+    and hence a queue position — frees)."""
+
+    def __init__(self, msg: str = "", depth: Optional[int] = None,
+                 retry_after: Optional[float] = None) -> None:
+        super().__init__(msg)
+        self.depth = depth
+        self.retry_after = retry_after
 
 
 @dataclass(frozen=True)
@@ -211,10 +236,12 @@ class TracedRequest:
 class TraceReport:
     requests: List = field(default_factory=list)   # admitted Requests
     rejected: int = 0                              # shed by backpressure
+    retried: int = 0                               # rejected, then re-offered
 
     def merge(self, other: "TraceReport") -> "TraceReport":
         return TraceReport(self.requests + other.requests,
-                           self.rejected + other.rejected)
+                           self.rejected + other.rejected,
+                           self.retried + other.retried)
 
 
 def _engine_idle(eng) -> bool:
@@ -222,55 +249,123 @@ def _engine_idle(eng) -> bool:
 
 
 def _play_engine(front, eng, trace: List[TracedRequest],
-                 max_steps: int) -> TraceReport:
+                 max_steps: int, retry_rejected: int = 0) -> TraceReport:
     """Drive one engine from a time-sorted trace: submit every arrival the
     virtual clock has reached (rejections count, not raise), advance the
     clock over idle gaps, step while there is work. ``front`` is what
     ``submit`` is called on (the engine itself, or a ShardedFrontend that
-    routes + announces and lands the request on ``eng``)."""
+    routes + announces and lands the request on ``eng``).
+
+    ``retry_rejected`` > 0 re-offers each ``QueueFull``-bounced arrival up
+    to that many times, waiting out the rejection's ``retry_after`` hint;
+    retries keep the original arrival time, so the wait shows up in TTFT
+    and counts against goodput."""
     report = TraceReport()
-    i = 0
+    pending = [(tr.t, i, 0, tr) for i, tr in enumerate(trace)]
+    heapq.heapify(pending)
+    seq = itertools.count(len(trace))
     for _ in range(max_steps):
-        while i < len(trace) and trace[i].t <= eng.now:
-            tr = trace[i]
-            i += 1
+        while pending and pending[0][0] <= eng.now:
+            _, _, tries, tr = heapq.heappop(pending)
             abs_deadline = None if tr.deadline is None else tr.t + tr.deadline
             try:
                 req = front.submit(tr.prompt, max_new=tr.max_new,
                                    deadline=abs_deadline, arrival=tr.t)
-            except QueueFull:
-                report.rejected += 1
+            except QueueFull as e:
+                if tries < retry_rejected:
+                    wait = e.retry_after if e.retry_after else 1.0
+                    heapq.heappush(pending, (eng.now + wait, next(seq),
+                                             tries + 1, tr))
+                    report.retried += 1
+                    _trace_retry(eng, tries + 1, wait)
+                else:
+                    report.rejected += 1
                 continue
             if isinstance(req, tuple):          # ShardedFrontend returns
                 req = req[1]                    # (shard, Request)
             report.requests.append(req)
         if _engine_idle(eng):
-            if i >= len(trace):
+            if not pending:
                 return report
-            eng.now = max(eng.now, trace[i].t)  # jump the idle gap
+            eng.now = max(eng.now, pending[0][0])  # jump the idle gap
             continue
         eng.step()
     raise RuntimeError(f"trace not drained in {max_steps} steps")
 
 
+def _play_frontend(front, trace: List[TracedRequest], max_steps: int,
+                   retry_rejected: int = 0) -> TraceReport:
+    """Interleaved front-door loop for a fault-injected ``ShardedFrontend``:
+    all shards step round-robin through ``front.step()`` (where crash
+    detection and failover live), and each arrival is submitted once its
+    own shard's clock reaches it. The per-shard sequential replay in
+    ``play_trace`` cannot drive crash recovery — a crashed shard's
+    requeued requests must interleave with the other shards' progress."""
+    report = TraceReport()
+    pending = [(tr.t, i, 0, tr) for i, tr in enumerate(trace)]
+    heapq.heapify(pending)
+    seq = itertools.count(len(trace))
+    for _ in range(max_steps):
+        while pending:
+            t, _, tries, tr = pending[0]
+            eng = front.shards[front.shard_of(tr.prompt)]
+            if t > eng.now:
+                break
+            heapq.heappop(pending)
+            abs_deadline = None if tr.deadline is None else tr.t + tr.deadline
+            try:
+                _, req = front.submit(tr.prompt, max_new=tr.max_new,
+                                      deadline=abs_deadline, arrival=tr.t)
+            except QueueFull as e:
+                if tries < retry_rejected:
+                    wait = e.retry_after if e.retry_after else 1.0
+                    heapq.heappush(pending, (eng.now + wait, next(seq),
+                                             tries + 1, tr))
+                    report.retried += 1
+                    _trace_retry(eng, tries + 1, wait)
+                else:
+                    report.rejected += 1
+                continue
+            report.requests.append(req)
+        if not any(e.queue or any(s is not None for s in e.slots)
+                   for e in front.shards):
+            if not pending:
+                return report
+            t = pending[0][0]
+            for e in front.shards:
+                e.now = max(e.now, t)           # jump the idle gap
+            continue
+        front.step()
+    raise RuntimeError(f"trace not drained in {max_steps} steps")
+
+
 def play_trace(engine, trace: Sequence[TracedRequest], *,
-               max_steps: int = 1_000_000) -> TraceReport:
+               max_steps: int = 1_000_000,
+               retry_rejected: int = 0) -> TraceReport:
     """Run a timed arrival trace through a ``ServeEngine`` or a
     ``ShardedFrontend``. Shards are independent servers with independent
     virtual clocks, so a frontend trace is split by the (unchanged)
     prefix-affinity router and each shard replays its own arrivals —
-    per-shard queues, per-shard backpressure."""
+    per-shard queues, per-shard backpressure. A fault-injected frontend
+    instead runs the interleaved loop (shard crashes re-route work across
+    shards mid-trace, so the shards cannot replay independently)."""
     trace = sorted(trace, key=lambda r: r.t)
     if hasattr(engine, "shards"):               # ShardedFrontend
+        faults = getattr(engine, "faults", None)
+        if faults is not None and not faults.plan.empty:
+            # an empty plan injects nothing, so the (bit-identical)
+            # per-shard replay below serves it too
+            return _play_frontend(engine, trace, max_steps, retry_rejected)
         per_shard: Dict[int, List[TracedRequest]] = {}
         for tr in trace:
             per_shard.setdefault(engine.shard_of(tr.prompt), []).append(tr)
         report = TraceReport()
         for k, shard_trace in sorted(per_shard.items()):
-            report = report.merge(_play_engine(engine, engine.shards[k],
-                                               shard_trace, max_steps))
+            report = report.merge(
+                _play_engine(engine, engine.shards[k], shard_trace,
+                             max_steps, retry_rejected))
         return report
-    return _play_engine(engine, engine, trace, max_steps)
+    return _play_engine(engine, engine, trace, max_steps, retry_rejected)
 
 
 # ---------------------------------------------------------------------------
@@ -308,6 +403,7 @@ def latency_stats(report: TraceReport) -> Dict[str, float]:
             met += r.first_token_at <= r.deadline
     offered = len(report.requests) + report.rejected
     out = {"n_offered": offered, "n_rejected": report.rejected,
+           "n_retried": getattr(report, "retried", 0),
            "goodput": round(float(met) / max(offered, 1), 4)}
     for name, xs in (("ttft", ttft), ("tpot", tpot)):
         for q in (50, 95, 99):

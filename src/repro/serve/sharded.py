@@ -31,12 +31,14 @@ restore means K-shard output is token-identical to the single engine
 from __future__ import annotations
 
 import hashlib
+import itertools
 import os
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core import (BlockMeta, CacheMetrics, JobDAG, MessageBus, PeerTracker,
                     PeerTrackerMaster, TaskSpec)
-from ..obs.trace import TID_BUS as _TID_BUS
+from ..faults import FaultInjector, FaultPlan
+from ..obs.trace import TID_BUS as _TID_BUS, TID_ENGINE as _TID_ENGINE
 from .engine import Request, ServeEngine
 from .prefix_store import PrefixStore
 from .scheduler import Scheduler, StepCostModel
@@ -76,11 +78,20 @@ class ShardedFrontend:
                  max_queue: Optional[int] = None,
                  clock: Optional[StepCostModel] = None,
                  eos_interval: int = 8, tp: int = 1,
-                 stats_level: str = "full") -> None:
+                 stats_level: str = "full",
+                 faults: Union[FaultPlan, FaultInjector, None] = None
+                 ) -> None:
         assert n_shards >= 1
         self.n_shards = n_shards
         self.block_tokens = block_tokens
+        if isinstance(faults, FaultPlan):
+            faults = faults.injector()
+        self.faults: Optional[FaultInjector] = faults
+        self.failover_retries = 0
+        self.shard_crashes_fired = 0
+        self._recorder = None
         self.bus = MessageBus(record_log=False, stats_level=stats_level)
+        self.bus.faults = faults
         self.trackers = [PeerTracker(k, self.bus) for k in range(n_shards)]
         for tr in self.trackers:
             # per-replica eviction logs are test/debug instrumentation;
@@ -90,19 +101,21 @@ class ShardedFrontend:
         self.shards: List[ServeEngine] = []
         self._distribute_profiles = True
         self._coordinated = True
+        # everything a crash rebuild needs to reconstruct a shard's store
+        # and engine from scratch (the replacement runs the same config)
+        self._store_args = dict(
+            capacity_bytes=capacity_bytes, policy=policy,
+            block_tokens=block_tokens,
+            host_capacity_bytes=host_capacity_bytes, kv_quant=kv_quant,
+            disk_capacity_bytes=disk_capacity_bytes, disk_dir=disk_dir)
+        self._engine_args = dict(
+            max_slots=max_slots, max_seq=max_seq, eos_id=eos_id,
+            prefill_chunk=prefill_chunk, pool_blocks=pool_blocks,
+            paged=paged, scheduler=scheduler, max_queue=max_queue,
+            clock=clock, eos_interval=eos_interval, tp=tp)
+        self._cfg, self._params = cfg, params
         for k in range(n_shards):
-            if host_capacity_bytes > 0:
-                store: PrefixStore = TieredKVStore(
-                    capacity_bytes, policy, block_tokens=block_tokens,
-                    host_capacity_bytes=host_capacity_bytes,
-                    kv_quant=kv_quant,
-                    disk_capacity_bytes=disk_capacity_bytes,
-                    # each shard's memmap files live in their own subdir
-                    disk_dir=(os.path.join(disk_dir, f"shard{k}")
-                              if disk_dir else None))
-            else:
-                store = PrefixStore(capacity_bytes, policy,
-                                    block_tokens=block_tokens)
+            store = self._build_store(k)
             if k == 0:
                 # protocol level is a tier-wide deployment choice derived
                 # from the store policy, exactly as in sim.ClusterSim: a
@@ -114,18 +127,38 @@ class ShardedFrontend:
             # shards (cache partitioning) and tp (tensor parallelism of
             # each shard's pool) compose: every engine shares one serve
             # mesh, so K shards × tp devices all hold 1/tp of each pool
-            self.shards.append(ServeEngine(
-                cfg, params, max_slots=max_slots, max_seq=max_seq,
-                store=store, eos_id=eos_id, prefill_chunk=prefill_chunk,
-                pool_blocks=pool_blocks, paged=paged,
-                scheduler=scheduler, max_queue=max_queue, clock=clock,
-                eos_interval=eos_interval, tp=tp))
+            self.shards.append(self._build_engine(store))
+
+    def _build_store(self, k: int) -> PrefixStore:
+        a = self._store_args
+        if a["host_capacity_bytes"] > 0:
+            store: PrefixStore = TieredKVStore(
+                a["capacity_bytes"], a["policy"],
+                block_tokens=a["block_tokens"],
+                host_capacity_bytes=a["host_capacity_bytes"],
+                kv_quant=a["kv_quant"],
+                disk_capacity_bytes=a["disk_capacity_bytes"],
+                # each shard's memmap files live in their own subdir
+                disk_dir=(os.path.join(a["disk_dir"], f"shard{k}")
+                          if a["disk_dir"] else None))
+            # attach BEFORE the engine builds the pools, so the disk pool
+            # inherits the injector
+            store.faults = self.faults
+        else:
+            store = PrefixStore(a["capacity_bytes"], a["policy"],
+                                block_tokens=a["block_tokens"])
+        return store
+
+    def _build_engine(self, store: PrefixStore) -> ServeEngine:
+        return ServeEngine(self._cfg, self._params, store=store,
+                           **self._engine_args)
 
     # ------------------------------------------------------------------ obs
     def attach_trace(self, recorder) -> None:
         """Wire one ``TraceRecorder`` through the whole tier: each shard's
         engine becomes a pid of its own (``shard{k}``), and the
         coordination bus a final pid with its messages on the bus lane."""
+        self._recorder = recorder
         for k, eng in enumerate(self.shards):
             eng.attach_trace(recorder, pid=k, name=f"shard{k}")
         recorder.label(self.n_shards, "bus", tid=_TID_BUS)
@@ -215,6 +248,8 @@ class ShardedFrontend:
         return self.shards[self.shard_of(req.prompt)].cancel(req)
 
     def step(self) -> List[Request]:
+        if self.faults is not None:
+            self._check_faults()
         finished: List[Request] = []
         for eng in self.shards:
             if eng.queue or any(s is not None for s in eng.slots):
@@ -228,6 +263,117 @@ class ShardedFrontend:
                        for e in self.shards):
                 return
             self.step()
+
+    # -------------------------------------------------------- fault handling
+    def _check_faults(self) -> None:
+        """Fire every scheduled shard crash whose shard clock has been
+        reached (once each), then deliver any fault-delayed bus messages
+        now due on the tier's most advanced clock."""
+        fi = self.faults
+        for i, (t, k) in enumerate(fi.plan.shard_crashes):
+            if (0 <= k < self.n_shards and self.shards[k].now >= t
+                    and fi.claim(("shard", i))):
+                self._crash_shard(k)
+        if self.bus._delayed:
+            self.bus.flush_delayed(max(e.now for e in self.shards))
+
+    def _crash_shard(self, k: int) -> None:
+        """Kill shard ``k`` and fail over: its device/host/disk KV state is
+        gone, so (1) its whole DAG namespace is purged from the
+        coordination plane (the master relays, so every surviving replica
+        converges), (2) a replacement engine + store + ``PeerTracker``
+        replica is built on the same bus endpoint and seeded via the
+        anti-entropy ``resync`` protocol, and (3) every in-flight request
+        is re-registered and requeued on the fresh shard with capped
+        exponential backoff — deadlines unchanged, so the lost work counts
+        against goodput exactly as a client would experience it."""
+        fi = self.faults
+        fi.count("fault.shard_crash")
+        self.shard_crashes_fired += 1
+        old = self.shards[k]
+        store = old.store
+        if old.trace is not None:
+            old.trace.vt = old.now
+            old.trace.instant(
+                "fault.shard_crash", "engine", k, _TID_ENGINE,
+                args={"shard": k,
+                      "in_flight": sum(s is not None for s in old.slots),
+                      "queued": len(old.queue)})
+        inflight = sorted(
+            (r for r in list(old.slots) + list(old.queue)
+             if r is not None and not r.done),
+            key=lambda r: r.rid)
+        # ---- purge the namespace from the global coordination state.
+        # Driver-originated status updates relay to every replica, so the
+        # surviving shards and the master converge on "shard k holds
+        # nothing" before the replacement announces anything.
+        if self._distribute_profiles:
+            for rid in sorted(store._req_tasks):
+                for tid in store._req_tasks[rid]:
+                    ns = self._ns(k, tid)
+                    if ns in self.master.dag.tasks:
+                        self.master.status_update("task_removed", ns)
+        for node in sorted(store._nodes.values(), key=lambda n: n.uid):
+            bid = self._ns(k, node.block_id)
+            if bid in self.master.state.cached:
+                self.master.status_update("evicted", bid)
+            self.master.status_update("forget_block", bid)
+        old.close()
+        # ---- replacement replica on the same bus endpoint (re-register
+        # swaps the handler) + fresh store/engine with the old clock and a
+        # request-id counter past the old one (rids stay unique per pid)
+        tracker = PeerTracker(k, self.bus)
+        tracker.record_eviction_log = self.trackers[k].record_eviction_log
+        self.trackers[k] = tracker
+        new_store = self._build_store(k)
+        self._wire(k, new_store)
+        eng = self._build_engine(new_store)
+        eng.now = old.now
+        eng._rid = itertools.count(next(old._rid))
+        if self._recorder is not None:
+            eng.attach_trace(self._recorder, pid=k, name=f"shard{k}")
+        self.shards[k] = eng
+        tracker.request_resync(include_dag=self._distribute_profiles)
+        fi.count("recover.resync")
+        if eng.trace is not None:
+            eng.trace.instant(
+                "recover.resync", "engine", k, _TID_ENGINE,
+                args={"shard": k, "include_dag": self._distribute_profiles})
+        # ---- requeue in-flight work, REUSING the Request objects (the
+        # caller holds references): generation restarts from scratch on
+        # the rebuilt shard after a capped exponential backoff
+        for r in inflight:
+            r.slot = -1
+            r.pos = 0
+            r.generated = []
+            r.n_generated = 0
+            r._lazy_out = []
+            r.prefill_skipped = 0
+            r.first_token_at = None
+            r.retries += 1
+            r.not_before = eng.now + fi.plan.backoff(r.retries)
+            r.prefix_rid = eng.store.register_request(r.prompt)
+            eng.queue.append(r)
+            self._announce(k, eng.store, r.prefix_rid)
+            self.failover_retries += 1
+            fi.count("recover.requeue")
+            if eng.trace is not None:
+                eng.trace.instant(
+                    "recover.requeue", "engine", k, _TID_ENGINE,
+                    args={"rid": r.rid, "retries": r.retries,
+                          "not_before": r.not_before})
+
+    def resync_replicas(self) -> None:
+        """Anti-entropy sweep: every tracker pulls the master's snapshot.
+        Reconverges replicas that drifted behind dropped status traffic
+        (crash rebuilds resync automatically)."""
+        for tr in self.trackers:
+            tr.request_resync(include_dag=self._distribute_profiles)
+
+    def close(self) -> None:
+        """Deterministic teardown of every shard's file-backed resources."""
+        for eng in self.shards:
+            eng.close()
 
     # ------------------------------------------------------------ invariants
     def verify_replicas(self) -> None:
@@ -295,6 +441,8 @@ class ShardedFrontend:
             out["prefill_tokens_skipped"]
             / max(out["prefill_tokens"] + out["prefill_tokens_skipped"], 1))
         out["n_shards"] = self.n_shards
+        out["shard_crashes"] = self.shard_crashes_fired
+        out["failover_retries"] = self.failover_retries
         for key, val in self.bus.stats.as_dict().items():
             out[f"msg_{key}"] = val
         return out

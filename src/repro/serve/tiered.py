@@ -124,6 +124,19 @@ class TieredKVStore(PrefixStore):
         # quantize) + device_get at the end of the batch, before any freed
         # device row can be reused.
         self._pending_demotions: List[Tuple[int, int]] = []
+        # ---- fault injection + graceful degradation ----
+        # repro.faults.FaultInjector shared with the whole run (None =
+        # healthy). Must be attached BEFORE attach_pools so the disk pool
+        # inherits it.
+        self.faults = None
+        self.disk_quarantined = False
+        # consecutive disk I/O errors; only a successful disk READ resets
+        # it — writes landing doesn't prove the bytes come back, so a disk
+        # that accepts demotions but fails every promote still quarantines
+        self._disk_errors = 0
+        # virtual-clock stall accrued by slow promotions this step; the
+        # engine drains it into ``now`` after the step's compute charge
+        self.pending_stall = 0.0
 
     # --------------------------------------------------------------- wiring
     def attach_pools(self, device_pool: KVBlockPool,
@@ -132,6 +145,8 @@ class TieredKVStore(PrefixStore):
         self.device_pool = device_pool
         self.host_pool = host_pool
         self.disk_pool = disk_pool
+        if disk_pool is not None:
+            disk_pool.faults = self.faults
         # fallback/final device evictions still free pool rows directly
         self.evict_payload = device_pool.free
 
@@ -143,7 +158,8 @@ class TieredKVStore(PrefixStore):
     @property
     def disk_tiered(self) -> bool:
         return (self.disk_capacity > 0 and self.disk_pool is not None
-                and self.disk_pool.num_blocks > 0)
+                and self.disk_pool.num_blocks > 0
+                and not self.disk_quarantined)
 
     def _host_nbytes(self, node: Node) -> int:
         """Bytes one block charges against the host budget. Quantized
@@ -230,7 +246,16 @@ class TieredKVStore(PrefixStore):
                       "ineffective": ineff})
         demoted = [n for n in usable if not n.resident]
         if demoted:
-            self._promote(demoted, exclude={n.block_id for n in chain})
+            failed = self._promote(demoted,
+                                   exclude={n.block_id for n in chain})
+            if failed:
+                # a promotion timed out or its disk read died: the chain is
+                # only usable up to the first unpromoted block — everything
+                # past it falls back to prefill recompute (degraded mode)
+                for i, n in enumerate(usable):
+                    if n.block_id in failed:
+                        usable = usable[:i]
+                        break
         return usable
 
     # --------------------------------------------------------------- writes
@@ -308,10 +333,15 @@ class TieredKVStore(PrefixStore):
         blocks, scales = out if self.quant is not None else (out, None)
         blocks, scales = quantlib.transcode_tree_np(
             blocks, scales, self.quant, self.disk_quant)
+        disk_idx = self.disk_pool.alloc()
+        try:
+            self.disk_pool.write_rows([disk_idx], blocks, scales)
+        except OSError:
+            self.disk_pool.free(disk_idx)
+            self._note_disk_io_error("demote_write")
+            return False
         if self.disk_quant is not None:
             self.metrics_obj.quantized_demotions += 1
-        disk_idx = self.disk_pool.alloc()
-        self.disk_pool.write_rows([disk_idx], blocks, scales)
         self.device_pool.free(node.payload)
         node.disk_payload = disk_idx
         node.payload = None
@@ -424,10 +454,15 @@ class TieredKVStore(PrefixStore):
         blocks, scales = out if self.quant is not None else (out, None)
         blocks, scales = quantlib.transcode_tree_np(
             blocks, scales, self.quant, self.disk_quant)
+        disk_idx = self.disk_pool.alloc()
+        try:
+            self.disk_pool.write_rows([disk_idx], blocks, scales)
+        except OSError:
+            self.disk_pool.free(disk_idx)
+            self._note_disk_io_error("demote_write")
+            return False
         if self.disk_quant is not None and self.disk_quant != self.quant:
             self.metrics_obj.quantized_demotions += 1
-        disk_idx = self.disk_pool.alloc()
-        self.disk_pool.write_rows([disk_idx], blocks, scales)
         self._release_host(node)
         node.disk_payload = disk_idx
         self.disk_used += dbytes
@@ -462,7 +497,7 @@ class TieredKVStore(PrefixStore):
         self._gc_upward(node)
 
     # ------------------------------------------------------------ promotion
-    def _promote(self, nodes: List[Node], exclude: Set[str]) -> None:
+    def _promote(self, nodes: List[Node], exclude: Set[str]) -> Set[str]:
         """Bring demoted blocks back on-device: make tier-0 room (which may
         demote colder blocks — the whole looked-up chain is excluded), then
         ONE host→device transfer + scatter per source tier for the batch
@@ -471,12 +506,40 @@ class TieredKVStore(PrefixStore):
         their bytes stream through host RAM, not through host-pool rows, so
         a promotion never needs host-tier room. Mirrors
         ``CacheManager.load_from_disk``: the blocks re-enter the fast tier
-        as loads, flipping their peer groups complete again."""
+        as loads, flipping their peer groups complete again.
+
+        Returns the block ids that did NOT promote: a stalled promotion
+        past the plan's timeout abandons the whole batch *before* any
+        mutation (the blocks simply stay demoted — recomputable), and a
+        disk-tier read error kills the affected blocks (their bytes are
+        unreachable). The caller truncates the usable chain accordingly."""
+        if self.faults is not None:
+            stall = self.faults.promotion_stall()
+            if stall > 0.0:
+                if stall > self.faults.plan.promotion_timeout:
+                    # abandon before touching indexes or payloads: the
+                    # chain stays demoted and the engine recomputes — a
+                    # stalled disk can never wedge the step
+                    self.metrics_obj.promotion_timeouts += 1
+                    if self.trace is not None:
+                        self.trace.instant(
+                            "fault.promotion_timeout", "store",
+                            self.trace_pid, _TID_STORE,
+                            args={"blocks": len(nodes), "stall": stall})
+                    return {n.block_id for n in nodes}
+                self.pending_stall += stall
+                self.metrics_obj.promotion_stalls += 1
+                if self.trace is not None:
+                    self.trace.instant(
+                        "fault.promotion_stall", "store", self.trace_pid,
+                        _TID_STORE,
+                        args={"blocks": len(nodes), "stall": stall})
         for node in nodes:
             self.host_index.discard(node.block_id)
             self.disk_index.discard(node.block_id)
         self._make_room(sum(n.nbytes for n in nodes), exclude=exclude)
         dev_rows = [self.device_pool.alloc() for _ in nodes]
+        failed: Set[str] = set()
         for pool, spec, srcs in (
                 (self.host_pool, self.quant,
                  [(n, d) for n, d in zip(nodes, dev_rows)
@@ -489,7 +552,23 @@ class TieredKVStore(PrefixStore):
             src_rows = [n.host_payload if pool is self.host_pool
                         else n.disk_payload for n, _ in srcs]
             dst_rows = [d for _, d in srcs]
-            out = pool.read_rows(src_rows)
+            try:
+                out = pool.read_rows(src_rows)
+            except OSError:
+                # the disk tier lost these bytes: free the reserved device
+                # rows, kill the blocks (no copy survives anywhere), and
+                # let quarantine accounting decide the tier's fate
+                for n, d in srcs:
+                    failed.add(n.block_id)
+                    self.device_pool.free(d)
+                    self._release_disk(n)
+                    n.nbytes = 0
+                    self.metrics_obj.disk_evictions += 1
+                    self.disk_eviction_log.append(n.block_id)
+                self._note_disk_io_error("promote_read")
+                continue
+            if pool is self.disk_pool:
+                self._disk_errors = 0
             if spec is None:
                 self.device_pool.write_rows(dst_rows, out)
             else:
@@ -498,6 +577,9 @@ class TieredKVStore(PrefixStore):
                 self.metrics_obj.dequantized_promotions += len(src_rows)
             self.metrics_obj.promotion_dispatches += 1
         for node, dev in zip(nodes, dev_rows):
+            if node.block_id in failed:
+                self._gc_upward(node)
+                continue
             if self.trace is not None:
                 self._trace_move(
                     "store.promote", node,
@@ -525,7 +607,59 @@ class TieredKVStore(PrefixStore):
             if self.on_status is not None:
                 self.on_status("loaded", node.block_id)
         for node in reversed(nodes):              # leaf first, root last
-            self.policy.on_insert(node.block_id)
+            if node.block_id not in failed:
+                self.policy.on_insert(node.block_id)
+        return failed
+
+    # --------------------------------------------- disk-fault bookkeeping
+    def _note_disk_io_error(self, site: str) -> None:
+        """One disk I/O error happened (injected or real): count it and
+        quarantine the tier after ``quarantine_after`` consecutive
+        failures."""
+        self.metrics_obj.disk_io_errors += 1
+        self._disk_errors += 1
+        if self.faults is not None:
+            self.faults.count("fault.disk_io")
+        if self.trace is not None:
+            self.trace.instant(
+                "fault.disk_io", "store", self.trace_pid, _TID_STORE,
+                args={"site": site, "consecutive": self._disk_errors})
+        threshold = (self.faults.plan.quarantine_after
+                     if self.faults is not None else 3)
+        if not self.disk_quarantined and self._disk_errors >= threshold:
+            self._quarantine_disk()
+
+    def _quarantine_disk(self) -> None:
+        """Take a failing disk tier out of rotation: every disk-resident
+        block dies (its bytes are untrustworthy), future demotions skip
+        the rung (``disk_tiered`` goes False), and the store degrades to
+        the PR 5 two-tier semantics — eviction + prefill recompute — with
+        zero exceptions escaping to the engine."""
+        if self.disk_quarantined:
+            return
+        self.disk_quarantined = True
+        self.metrics_obj.disk_quarantines += 1
+        victims = sorted((n for n in self._nodes.values()
+                          if n.disk_payload is not None),
+                         key=lambda n: n.uid)
+        if self.trace is not None:
+            self.trace.instant(
+                "fault.disk_quarantine", "store", self.trace_pid,
+                _TID_STORE, args={"blocks_lost": len(victims),
+                                  "errors": self._disk_errors})
+        for node in victims:
+            self._release_disk(node)
+            node.nbytes = 0
+            self.metrics_obj.disk_evictions += 1
+            self.disk_eviction_log.append(node.block_id)
+            self._gc_upward(node)
+
+    # -------------------------------------------------------------- lifetime
+    def close(self) -> None:
+        """Deterministic teardown of file-backed resources (the disk
+        pool's memmap row files)."""
+        if self.disk_pool is not None:
+            self.disk_pool.close()
 
     # -------------------------------------------------------------- metrics
     def metrics(self) -> Dict[str, float]:

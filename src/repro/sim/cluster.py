@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core import (Belady, CacheManager, CacheMetrics, DagState, JobDAG,
                     MessageBus, MessageStats, PeerTracker, PeerTrackerMaster,
                     TaskSpec, make_policy)
+from ..faults import FaultInjector, FaultPlan
 from ..obs.trace import TID_BUS as _TID_BUS
 
 
@@ -79,9 +80,19 @@ class ClusterSim:
     def __init__(self, n_workers: int, hw: HardwareModel, policy: str = "lerc",
                  policy_kwargs: Optional[dict] = None,
                  cache_outputs: bool = True,
-                 trace=None, stats_level: str = "full") -> None:
+                 trace=None, stats_level: str = "full",
+                 faults=None) -> None:
         self.n_workers = n_workers
         self.hw = hw
+        # deterministic fault injection (repro.faults): worker crashes fire
+        # as simulator events at their plan times; bus faults ride the
+        # shared MessageBus. None = healthy cluster, bit-identical to a sim
+        # built without the parameter.
+        if isinstance(faults, FaultPlan):
+            faults = faults.injector()
+        self.faults: Optional[FaultInjector] = faults
+        self._faulted = False                     # any crash fired yet?
+        self.worker_crashes_fired = 0
         # obs: an attached TraceRecorder (None = zero-overhead off). Tasks
         # are retrospective X events on the VIRTUAL clock — pid 0 with one
         # lane per worker; the bus is pid 1.
@@ -90,6 +101,7 @@ class ClusterSim:
         # state) and one worker-side tracker per machine, each holding its
         # own DagState replica fed only by bus messages
         self.bus = MessageBus(record_log=False, stats_level=stats_level)
+        self.bus.faults = self.faults
         if trace is not None:
             trace.label(0, "sim")
             for w in range(n_workers):
@@ -236,6 +248,20 @@ class ClusterSim:
         seq = itertools.count()
         per_job_finish: Dict[str, float] = {}
         task_runtimes: Dict[str, float] = {}
+        # makespan is charged by task completions only: a crash event (or a
+        # delayed bus flush) after the last finish must not extend it
+        makespan = 0.0
+        # tid -> (worker, finish-event seq): tasks currently executing. A
+        # crash aborts the victims by seq, so their already-queued finish
+        # events become stale no-ops — the recompute run pushes fresh ones.
+        inflight: Dict[str, Tuple[int, int]] = {}
+        aborted: set = set()
+        if self.faults is not None:
+            for i, (t, w) in enumerate(self.faults.plan.worker_crashes):
+                if (0 <= int(w) < self.n_workers
+                        and self.faults.claim(("worker", i))):
+                    heapq.heappush(events, (float(t), next(seq),
+                                            "crash", "", int(w)))
 
         def runnable(t: TaskSpec) -> bool:
             return (t.id not in done
@@ -270,21 +296,46 @@ class ClusterSim:
                         task.id, "task", 0, worker,
                         vt=clock * 1e3, dur=dur * 1e3,
                         args={"job": task.job, "worker": worker})
-                heapq.heappush(events, (clock + dur, next(seq), "finish",
+                eseq = next(seq)
+                inflight[task.id] = (worker, eseq)
+                heapq.heappush(events, (clock + dur, eseq, "finish",
                                         task.id, worker))
 
         try_schedule()
         while events:
-            clock, _, kind, tid, worker = heapq.heappop(events)
+            clock, eseq, kind, tid, worker = heapq.heappop(events)
+            if self.bus.faults is not None and self.bus._delayed:
+                self.bus.flush_delayed(clock)
             if kind == "ready":
                 # the completion status report reached the driver: the
                 # dependent task is now visible to the scheduler
-                ready_by_job.setdefault(self.dag.tasks[tid].job, []) \
-                            .append(self.dag.tasks[tid])
+                t = self.dag.tasks[tid]
+                if self._faulted and (
+                        tid in done or tid in inflight
+                        or unmet.get(tid, 1) != 0
+                        or any(x.id == tid
+                               for x in ready_by_job.get(t.job, ()))):
+                    # stale: a crash-time readiness rebuild already re-listed
+                    # (or re-ran) this task before its report arrived
+                    continue
+                ready_by_job.setdefault(t.job, []).append(t)
                 try_schedule()
+                continue
+            if kind == "crash":
+                self._handle_crash(worker, clock, done, free_slots, inflight,
+                                   aborted, unmet, ready_by_job,
+                                   task_runtimes, runnable)
+                try_schedule()
+                continue
+            if eseq in aborted:
+                # finish event of a task killed by a crash mid-flight: the
+                # worker restarted, the slot accounting was reset there
+                aborted.discard(eseq)
                 continue
             task = self.dag.tasks[tid]
             done.add(tid)
+            inflight.pop(tid, None)
+            makespan = clock
             free_slots[worker] += 1
             # materialize output at this worker: the owning manager applies
             # the local event to its replica, then the worker reports it
@@ -321,11 +372,94 @@ class ClusterSim:
                             .append(self.dag.tasks[cons])
             try_schedule()
 
+        if self.bus.faults is not None:
+            # deliver any still-delayed traffic, then reconverge replicas
+            # that sit behind dropped status messages before the coherence
+            # check — anti-entropy is the documented repair path for drops
+            self.bus.flush_delayed(float("inf"))
+            if self.bus.stats.dropped:
+                self.resync_replicas()
         self.verify_replicas()
         self.metrics.check_attribution()
-        return SimResult(makespan=clock, metrics=self.metrics,
+        return SimResult(makespan=makespan, metrics=self.metrics,
                          messages=self.messages, per_job_finish=per_job_finish,
                          task_runtimes=task_runtimes)
+
+    # --------------------------------------------------------------- faults
+    def _handle_crash(self, worker: int, clock: float, done: set,
+                      free_slots: List[int], inflight, aborted: set,
+                      unmet, ready_by_job, task_runtimes, runnable) -> None:
+        """A worker crashed (and immediately restarts empty, Spark's
+        executor-loss model): its running tasks die, every block it cached
+        — memory and local disk — is gone, and the driver relays the loss
+        over the status channel so all replicas resurrect the producers'
+        references (``DagState.on_lost``). Dependent recompute is then just
+        ordinary scheduling over the repaired readiness view, charged to
+        the makespan like any other work."""
+        self._faulted = True
+        self.worker_crashes_fired += 1
+        if self.faults is not None:
+            self.faults.count("fault.worker_crash")
+        if self.trace is not None:
+            self.trace.instant("fault.worker_crash", "fault", 0, worker,
+                               vt=clock * 1e3)
+        # running tasks on the victim die: their queued finish events are
+        # stale; drop them by event seq (a recompute may re-run the same
+        # task id, whose fresh finish event must NOT be discarded)
+        for t_id, (w, eseq) in list(inflight.items()):
+            if w == worker:
+                aborted.add(eseq)
+                del inflight[t_id]
+                task_runtimes.pop(t_id, None)
+        # both tiers of the victim's block store are lost
+        mgr = self.managers[worker]
+        lost = sorted(set(mgr.mem.blocks) | set(mgr.disk.blocks))
+        for b in lost:
+            if b in mgr.mem:
+                mgr.mem.drop(b)
+            mgr.disk.drop(b)
+            mgr.index.discard(b)
+            mgr.policy.on_remove(b)
+        free_slots[worker] = self.hw.slots      # restarted executor
+        # driver-detected loss, relayed like a silent eviction: every
+        # replica (including the restarted worker's) folds on_lost —
+        # un-materialize, resurrect the producer's reference counts
+        resurrected = []
+        for b in lost:
+            self.master.status_update("lost", b)
+            self.home.pop(b, None)
+            p = self.dag.producer.get(b)
+            if p is not None and p in done:
+                done.discard(p)
+                resurrected.append(p)
+        if self.faults is not None:
+            self.faults.count("recover.lost_blocks", len(lost))
+            self.faults.count("recover.recompute", len(resurrected))
+        if self.trace is not None:
+            self.trace.instant("recover.lineage", "fault", 0, worker,
+                               vt=clock * 1e3,
+                               args={"lost_blocks": len(lost),
+                                     "recompute_tasks": len(resurrected)})
+        # rebuild the scheduler's readiness view from the repaired state:
+        # aborted + resurrected tasks become pending again, everything
+        # in-flight elsewhere stays where it is (in place — these dicts
+        # are closed over by the run() loop)
+        unmet.clear()
+        for t in self.dag.tasks.values():
+            if runnable(t) and t.id not in inflight:
+                unmet[t.id] = self._unmet(t)
+        for lst in ready_by_job.values():
+            lst.clear()
+        for t in sorted(self.dag.tasks.values(), key=lambda t: t.id):
+            if runnable(t) and t.id not in inflight and unmet[t.id] == 0:
+                ready_by_job.setdefault(t.job, []).append(t)
+
+    def resync_replicas(self) -> None:
+        """Anti-entropy: every tracker pulls the master's authoritative
+        snapshot (reliable RPC, exempt from injection). Used after runs
+        whose status traffic was lossy."""
+        for tr in self.trackers:
+            tr.request_resync(include_dag=self._distribute_profiles)
 
     # ------------------------------------------------------------ invariants
     def verify_replicas(self) -> None:
